@@ -1,0 +1,120 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from results/ JSONs.
+The narrative sections are maintained by hand in EXPERIMENTS.header.md; this
+script concatenates header + generated tables so the document is always in
+sync with the recorded runs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "scripts")
+from roofline_table import ARCH_ORDER, SHAPE_ORDER, load, table  # noqa: E402
+
+
+def fed_table(result_dir="results/dryrun"):
+    """Cross-pod (DCI-link) bytes from the boundary-classified `__xs`
+    records: the paper's communication claim on the scarce link."""
+    recs = {}
+    for f in glob.glob(os.path.join(result_dir, "*__xs.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["mode"])] = r
+    rows = ["| arch (train_4k, 2×16×16) | baseline cross-pod GB/dev/step | "
+            "feddcl local | feddcl sync | amortized (H=4) | DCI reduction | "
+            "total coll (baseline→fed) |", "|" + "---|" * 7]
+    for arch in ARCH_ORDER:
+        b = recs.get((arch, "baseline"))
+        l = recs.get((arch, "feddcl"))
+        s = recs.get((arch, "feddcl_sync"))
+        if not (b and l and s):
+            continue
+        bb = b["cross_silo_bytes_per_device"] / 1e9
+        ll = l["cross_silo_bytes_per_device"] / 1e9
+        ss = s["cross_silo_bytes_per_device"] / 1e9
+        am = ll + ss / 4
+        tot_b = b["collective_bytes_per_device"] / 1e9
+        tot_l = l["collective_bytes_per_device"] / 1e9
+        rows.append(f"| {arch} | {bb:.3f} | {ll:.3f} | {ss:.3f} | {am:.3f} "
+                    f"| **{bb/max(am,1e-9):.0f}×** | {tot_b:.1f}→{tot_l:.1f} |")
+    rows.append("")
+    rows.append("Scan-build accounting (like-for-like both sides); the local "
+                "step's cross-silo freedom is additionally asserted "
+                "structurally in tests/test_federated.py (no replica group "
+                "spans a silo). Intra-pod (ICI) traffic is unchanged by "
+                "design — FedDCL's tiers map silos onto pods precisely so "
+                "the iterative traffic stays on fast links.")
+    return "\n".join(rows)
+
+
+def hillclimb_table(result_dir="results/dryrun"):
+    """Baseline vs tagged variant records."""
+    rows = ["| pair | variant | compute | memory | collective | dominant | "
+            "mem/dev GiB |", "|" + "---|" * 7]
+    files = sorted(glob.glob(os.path.join(result_dir, "*__opt*.json")) +
+                   glob.glob(os.path.join(result_dir, "*__base_scan.json")))
+    for f in files:
+        r = json.load(open(f))
+        tag = os.path.basename(f).split("__")[-1][:-5]
+        base = os.path.basename(f).split("__opt")[0].split("__base_scan")[0]
+        base = base.rstrip("_")
+        bfile = os.path.join(result_dir, base + ".json")
+        if os.path.exists(bfile) and "base_scan" not in tag:
+            b = json.load(open(bfile))
+            rows.append(_hc_row(b, "baseline"))
+        rows.append(_hc_row(r, tag))
+    rows.append("")
+    rows.append("(`opt_rwkvseq_scan` compares against `base_scan` — both "
+                "scan-build, like-for-like; `opt_expandkv` is the RETAINED "
+                "REFUTED iteration, superseded by `opt_cacheseq`. Narrative "
+                "below.)")
+    return "\n".join(rows)
+
+
+def _hc_row(r, label):
+    mem = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 2**30
+    return (f"| {r['arch']}×{r['shape']} | {label} | "
+            f"{r['compute_s']*1e3:.1f}ms | {r['memory_s']*1e3:.1f}ms | "
+            f"{r['collective_s']*1e3:.1f}ms | {r['dominant'][:-2]} | {mem:.1f} |")
+
+
+def main():
+    recs = load("results/dryrun")
+    parts = [open("EXPERIMENTS.header.md").read()]
+
+    n16 = sum(1 for k in recs if k[2] == "16x16" and k[3] == "baseline")
+    n32 = sum(1 for k in recs if k[2] == "2x16x16" and k[3] == "baseline")
+    parts.append(f"\n## §Dry-run — compile status\n\n"
+                 f"Baseline pairs compiled: **{n16}/40** on 16×16 (256 chips), "
+                 f"**{n32}/40** on 2×16×16 (512 chips). Per-pair JSON records "
+                 f"(memory_analysis, cost_analysis, collective breakdown) in "
+                 f"`results/dryrun/`.\n")
+
+    parts.append("\n## §Roofline — single-pod (16×16, 256 chips) baseline\n\n"
+                 "Terms per step per chip (seconds→ms; constants: 197 TFLOP/s "
+                 "bf16, 819 GB/s HBM, 50 GB/s/link):\n\n")
+    parts.append(table(recs, mesh="16x16", mode="baseline"))
+
+    parts.append("\n\n### Multi-pod (2×16×16, 512 chips) compile proof\n\n"
+                 "All pairs lower+compile; cost columns are scan-build values "
+                 "(while-loop bodies counted once — compile proof + memory "
+                 "only, see Methodology):\n\n")
+    parts.append(table(recs, mesh="2x16x16", mode="baseline"))
+
+    parts.append("\n\n## §Perf — FedDCL communication schedule (the paper's "
+                 "technique at mesh level)\n\n")
+    parts.append(fed_table())
+
+    parts.append("\n\n### Hillclimb records (baseline → optimized)\n\n")
+    parts.append(hillclimb_table())
+
+    if os.path.exists("EXPERIMENTS.perflog.md"):
+        parts.append("\n\n" + open("EXPERIMENTS.perflog.md").read())
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print("EXPERIMENTS.md written")
+
+
+if __name__ == "__main__":
+    main()

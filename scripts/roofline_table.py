@@ -1,0 +1,65 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["llama3.2-1b", "gemma2-2b", "starcoder2-15b", "rwkv6-3b",
+              "granite-moe-1b-a400m", "musicgen-large", "deepseek-v3-671b",
+              "glm4-9b", "zamba2-1.2b", "chameleon-34b"]
+
+
+def load(result_dir="results/dryrun", include_tagged=False):
+    recs = {}
+    for f in glob.glob(os.path.join(result_dir, "*.json")):
+        name = os.path.basename(f)[:-5]
+        if not include_tagged and name.count("__") > 3:
+            continue                      # tagged hillclimb/variant record
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"], r["mode"])] = r
+    return recs
+
+
+def table(recs, mesh="16x16", mode="baseline", fmt="md"):
+    rows = []
+    header = ("| arch | shape | kind | compute | memory | collective | "
+              "dominant | useful% | mem/dev GiB | coll GB/dev |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, mode))
+            if r is None:
+                rows.append(f"| {arch} | {shape} | — | MISSING | | | | | | |")
+                continue
+            mem = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 2**30
+            rows.append(
+                f"| {arch} | {shape} | {r['kind']} | "
+                f"{r['compute_s']*1e3:.1f}ms | {r['memory_s']*1e3:.1f}ms | "
+                f"{r['collective_s']*1e3:.1f}ms | {r['dominant'][:-2]} | "
+                f"{r['useful_flops_ratio']*100:.1f} | {mem:.1f} | "
+                f"{r['collective_bytes_per_device']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def missing(recs, mesh, mode="baseline"):
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            if (arch, shape, mesh, mode) not in recs:
+                out.append((arch, shape))
+    return out
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    print(f"records: {len(recs)}")
+    for mesh in ("16x16", "2x16x16"):
+        m = missing(recs, mesh)
+        print(f"mesh {mesh}: {40 - len(m)}/40 baseline pairs done; missing: {m[:6]}")
+    print()
+    print(table(recs))

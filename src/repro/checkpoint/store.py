@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> flat .npz with path-encoded keys.
+
+Handles arbitrary nested dict/list/tuple pytrees (params, optimizer states,
+decode caches). Keys encode the tree path; restore rebuilds into the
+structure of a provided template (so dtypes/shardings can differ from the
+saved arrays and are re-imposed by the caller's device_put)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _fmt(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"#{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
+    """Atomic save (tmp + rename)."""
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __meta__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def load(path: str, template: Any) -> Any:
+    """Restore into the structure of `template` (dtype of saved arrays)."""
+    with np.load(path, allow_pickle=False) as zf:
+        flat = {k: zf[k] for k in zf.files if k != "__meta__"}
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl_leaf in paths_leaves:
+        key = _SEP.join(_fmt(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(tmpl_leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs template "
+                f"{np.shape(tmpl_leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with np.load(path, allow_pickle=False) as zf:
+        if "__meta__" in zf.files:
+            return json.loads(str(zf["__meta__"]))
+    return {}

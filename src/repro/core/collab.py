@@ -1,0 +1,107 @@
+"""Step 3 of FedDCL: collaboration-representation construction (eqs. 1–3).
+
+Two-level SVD protocol:
+  intra-group (eq. 1):  Ã^(i) = [Ã_1^(i) … Ã_{c_i}^(i)] ≈ U^(i) Σ^(i) V^(i)ᵀ
+                        B̃^(i) = U^(i) C_1^(i)          (C_1 nonsingular)
+  central    (eq. 2):   B̃ = [B̃^(1) … B̃^(d)] ≈ P D Qᵀ,  Z = P C_2
+  per-user   (eq. 3):   G_j^(i) = argmin_G ‖Ã_j^(i) G − Z‖_F  (least squares)
+
+Only B̃^(i) crosses the group boundary; only Z comes back. C_1/C_2 follow the
+paper's construction C_1^(i) = Σ^(i) (V_{j'}^(i))ᵀ E_1 (random orthogonal E,
+randomly selected user block j'), falling back to a random orthogonal matrix
+when that product is singular/non-square.
+
+Backends: "host" (NumPy float64 LAPACK — faithful to the paper's MATLAB) and
+"tpu" (fp32 Gram reduction via the Pallas `gram` kernel + eigh — DESIGN.md §3
+hardware adaptation). Both are covered by agreement tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# rank-k SVD with backend dispatch
+# --------------------------------------------------------------------------
+
+def topk_svd(A: np.ndarray, k: int, backend: str = "host"):
+    """Rank-k thin SVD. Returns (U (n,k), s (k,), V (m,k))."""
+    k = int(min(k, *A.shape))
+    if backend == "tpu":
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        U, s, V = gram_ops.gram_eigh_topk(jnp.asarray(A, jnp.float32), k)
+        return np.asarray(U), np.asarray(s), np.asarray(V)
+    U, s, Vt = np.linalg.svd(np.asarray(A, np.float64), full_matrices=False)
+    return U[:, :k], s[:k], Vt[:k].T
+
+
+def _random_orthogonal(rng, k: int) -> np.ndarray:
+    Q, R = np.linalg.qr(rng.standard_normal((k, k)))
+    return Q * np.sign(np.diag(R))[None, :]
+
+
+def _obfuscation(rng, s: np.ndarray, V: np.ndarray,
+                 block_cols: Sequence[int], k: int) -> np.ndarray:
+    """Paper's C = Σ (V_block_j')ᵀ E construction; random-orthogonal fallback
+    if the selected block yields a singular / non-square matrix."""
+    j = int(rng.integers(0, len(block_cols)))
+    lo = int(np.sum(block_cols[:j]))
+    hi = lo + int(block_cols[j])
+    Vb = V[lo:hi, :]                                  # (m̃_j, k)
+    if Vb.shape[0] == k:
+        C = (s[:, None] * Vb.T) @ _random_orthogonal(rng, k)
+        if np.linalg.cond(C) < 1e8:
+            return C
+    return _random_orthogonal(rng, k) * s[:, None]
+
+
+# --------------------------------------------------------------------------
+# protocol messages
+# --------------------------------------------------------------------------
+
+@dataclass
+class GroupBasis:
+    """What intra-group DC server i sends to the central FL server."""
+    B: np.ndarray                       # (r, m̂_i) = U^(i) C_1^(i)
+
+
+@dataclass
+class CentralTarget:
+    """What the central FL server returns to every DC server."""
+    Z: np.ndarray                       # (r, m̂) = P C_2
+
+
+def intra_group_basis(anchors: List[np.ndarray], m_hat_i: int, seed: int,
+                      backend: str = "host") -> GroupBasis:
+    """Eq. (1) on DC server i. anchors: per-user Ã_j^(i) of shape (r, m̃_ij)."""
+    rng = np.random.default_rng(seed)
+    A = np.concatenate(anchors, axis=1)               # (r, Σ m̃)
+    U, s, V = topk_svd(A, m_hat_i, backend)
+    C1 = _obfuscation(rng, s, V, [a.shape[1] for a in anchors], U.shape[1])
+    return GroupBasis(B=U @ C1)
+
+
+def central_target(bases: List[GroupBasis], m_hat: int, seed: int,
+                   backend: str = "host") -> CentralTarget:
+    """Eq. (2) on the central FL server."""
+    rng = np.random.default_rng(seed)
+    B = np.concatenate([b.B for b in bases], axis=1)  # (r, Σ m̂_i)
+    P, D, Q = topk_svd(B, m_hat, backend)
+    C2 = _obfuscation(rng, D, Q, [b.B.shape[1] for b in bases], P.shape[1])
+    return CentralTarget(Z=P @ C2)
+
+
+def solve_G(anchor_j: np.ndarray, Z: np.ndarray) -> np.ndarray:
+    """Eq. (3): G = argmin ‖Ã_j G − Z‖_F via least squares."""
+    G, *_ = np.linalg.lstsq(anchor_j, Z, rcond=None)
+    return G
+
+
+def alignment_residual(anchor_j: np.ndarray, G: np.ndarray,
+                       Z: np.ndarray) -> float:
+    """Relative ‖Ã G − Z‖_F / ‖Z‖_F — 0 under Theorem-1 conditions."""
+    return float(np.linalg.norm(anchor_j @ G - Z) / max(np.linalg.norm(Z), 1e-12))

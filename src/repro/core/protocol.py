@@ -1,0 +1,166 @@
+"""Algorithm 1: the full FedDCL protocol, end to end.
+
+Data layout mirrors the paper: Xs[i][j] is the raw data of user (i, j)
+(group i = intra-group DC server i, user j inside it). The orchestration
+below simulates the three roles in-process but preserves the exact
+communication pattern — what each message contains is exactly what the
+paper allows to cross each trust boundary:
+
+  user (i,j)  --{X̃_j^(i), Ã_j^(i), Y_j^(i)}-->  DC server i      (once)
+  DC server i --{B̃^(i)}------------------------>  FL server       (once)
+  FL server   --{Z}----------------------------->  DC servers      (once)
+  DC servers  <==federated rounds on X̂==>        FL server        (iterative)
+  DC server i --{G_j^(i), h}-------------------->  user (i,j)      (once)
+
+`CommLog` records every message and its payload bytes, which backs the
+communication-cost benchmark (benchmarks/comm_cost.py) and the paper's
+"each user communicates exactly twice" claim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import collab
+from repro.core.anchor import make_anchor
+from repro.core.mappings import LinearMap, fit_mapping
+
+
+@dataclass
+class CommEvent:
+    src: str
+    dst: str
+    payload: str
+    nbytes: int
+
+
+@dataclass
+class CommLog:
+    events: List[CommEvent] = field(default_factory=list)
+
+    def log(self, src: str, dst: str, payload: str, *arrays) -> None:
+        nbytes = int(sum(np.asarray(a).nbytes for a in arrays))
+        self.events.append(CommEvent(src, dst, payload, nbytes))
+
+    def user_round_trips(self) -> Dict[str, int]:
+        """Cross-institution communications per user — the paper's claim is
+        exactly 2 (upload step 4, download step 15)."""
+        counts: Dict[str, int] = {}
+        for e in self.events:
+            for node in (e.src, e.dst):
+                if node.startswith("user"):
+                    counts[node] = counts.get(node, 0) + 1
+        return counts
+
+    def total_bytes(self, match: Optional[Callable[[CommEvent], bool]] = None) -> int:
+        return sum(e.nbytes for e in self.events if match is None or match(e))
+
+
+@dataclass
+class FedDCLSetup:
+    """Everything produced by protocol steps 1–3 (before model training)."""
+    anchor: np.ndarray
+    mappings: List[List[LinearMap]]              # f_j^(i)
+    Gs: List[List[np.ndarray]]                   # G_j^(i)
+    collab_X: List[np.ndarray]                   # X̂^(i) per group (stacked users)
+    collab_Y: List[np.ndarray]                   # Y^(i) per group
+    comm: CommLog
+    m_hat: int
+
+    def user_transform(self, i: int, j: int) -> Callable[[np.ndarray], np.ndarray]:
+        """x -> f_j^(i)(x) G_j^(i) — the per-user input map of the final
+        integrated model t_j^(i)(X) = h(f(X) G)."""
+        f, G = self.mappings[i][j], self.Gs[i][j]
+        return lambda X: f(np.asarray(X, np.float64)) @ G
+
+
+def run_protocol(
+    Xs: Sequence[Sequence[np.ndarray]],
+    Ys: Sequence[Sequence[np.ndarray]],
+    *,
+    m_tilde: int,
+    m_hat: Optional[int] = None,
+    anchor_r: int = 2000,
+    anchor_kind: str = "uniform",
+    mapping_kind: str = "pca_rot",
+    seed: int = 0,
+    svd_backend: str = "host",
+    fixed_W: Optional[np.ndarray] = None,
+) -> FedDCLSetup:
+    """Steps 1–3 + 12 of Algorithm 1 (everything except the FL training,
+    which core/federated.run_federated performs on the returned collab_X)."""
+    d = len(Xs)
+    m = Xs[0][0].shape[1]
+    m_hat = m_hat or m_tilde
+    comm = CommLog()
+
+    # ---- Step 1: shared anchor (same seed everywhere) --------------------
+    allX = np.concatenate([np.concatenate(list(g), axis=0) for g in Xs], axis=0)
+    anchor = make_anchor(anchor_kind, seed, anchor_r,
+                         feat_min=allX.min(0), feat_max=allX.max(0),
+                         public_sample=allX[:: max(1, len(allX) // 512)])
+
+    # ---- Step 2: private maps + intermediate representations -------------
+    mappings: List[List[LinearMap]] = []
+    inter_X: List[List[np.ndarray]] = []
+    inter_A: List[List[np.ndarray]] = []
+    for i in range(d):
+        row_f, row_x, row_a = [], [], []
+        for j in range(len(Xs[i])):
+            f = fit_mapping(mapping_kind, np.asarray(Xs[i][j], np.float64),
+                            m_tilde, seed=seed * 1009 + i * 101 + j, W=fixed_W)
+            row_f.append(f)
+            Xt, At = f(np.asarray(Xs[i][j], np.float64)), f(anchor)
+            row_x.append(Xt)
+            row_a.append(At)
+            comm.log(f"user({i},{j})", f"dc({i})", "X~,A~,Y", Xt, At, Ys[i][j])
+        mappings.append(row_f)
+        inter_X.append(row_x)
+        inter_A.append(row_a)
+
+    # ---- Step 3a: intra-group bases -> central server --------------------
+    bases = []
+    for i in range(d):
+        gb = collab.intra_group_basis(inter_A[i], m_hat, seed * 31 + i,
+                                      backend=svd_backend)
+        bases.append(gb)
+        comm.log(f"dc({i})", "fl", "B~", gb.B)
+
+    # ---- Step 3b: central target Z -> DC servers --------------------------
+    target = collab.central_target(bases, m_hat, seed * 57, backend=svd_backend)
+    for i in range(d):
+        comm.log("fl", f"dc({i})", "Z", target.Z)
+
+    # ---- Step 3c + 12: per-user G, collaboration representations ----------
+    Gs: List[List[np.ndarray]] = []
+    collab_X: List[np.ndarray] = []
+    collab_Y: List[np.ndarray] = []
+    for i in range(d):
+        row_g = [collab.solve_G(inter_A[i][j], target.Z)
+                 for j in range(len(Xs[i]))]
+        Gs.append(row_g)
+        collab_X.append(np.concatenate(
+            [inter_X[i][j] @ row_g[j] for j in range(len(Xs[i]))], axis=0))
+        collab_Y.append(np.concatenate(list(Ys[i]), axis=0))
+
+    return FedDCLSetup(anchor=anchor, mappings=mappings, Gs=Gs,
+                       collab_X=collab_X, collab_Y=collab_Y, comm=comm,
+                       m_hat=m_hat)
+
+
+def finalize_user_models(setup: FedDCLSetup, h: Callable[[np.ndarray], np.ndarray],
+                         h_params_bytes: int = 0):
+    """Step 5/15: return t_j^(i)(X) = h(f_j^(i)(X) G_j^(i)) per user and log
+    the download leg (the user's 2nd and final communication)."""
+    models = []
+    for i in range(len(setup.mappings)):
+        row = []
+        for j in range(len(setup.mappings[i])):
+            tr = setup.user_transform(i, j)
+            setup.comm.log(f"dc({i})", f"user({i},{j})", "G,h",
+                           setup.Gs[i][j], np.zeros(h_params_bytes // 8 + 1))
+            row.append(lambda X, tr=tr: h(tr(X)))
+        models.append(row)
+    return models

@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention: online-softmax, GQA head mapping, causal /
+sliding-window masking and Gemma-2 logit softcapping fused in-kernel.
+
+Grid: (B, H, Sq/BQ, Sk/BK) — the key axis is innermost/sequential; running
+max / normalizer / accumulator live in VMEM scratch. Fully-masked key blocks
+(beyond the causal frontier or the sliding window) are skipped with pl.when,
+so the compute volume matches the mask, not the dense Sq×Sk rectangle.
+
+VMEM per program at BQ=BK=512, hd=128, fp32 scratch:
+  q,k,v blocks:  3 × 512×128×4 = 768 KiB   (bf16 inputs: 384 KiB)
+  logits:        512×512×4     =   1 MiB
+  acc + m + l:   512×128×4 + 2×512×128×4 ≈ 768 KiB
+≈ 2.5 MiB — well under the 16 MiB/core VMEM budget; MXU dims (512, 128)
+are multiples of the 128×128 systolic tile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_k: int, seq_k: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    # block-level skip: never any (q, k) pair with k visible
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window and window > 0:
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                    # (BQ, BK)
+        if softcap and softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window and window > 0:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        l_prev = l_scr[:, 0]
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "q_offset", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 512,
+                           block_k: int = 512, q_offset: int = 0,
+                           interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd). Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    grid = (B, H, Sq // bq, Sk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=1.0 / math.sqrt(hd),
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, seq_k=Sk, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),   # running max
+            pltpu.VMEM((bq, LANES), jnp.float32),   # running normalizer
+            pltpu.VMEM((bq, hd), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Public fused-attention entry point, model layout (B, S, H, hd)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "backend", "q_offset"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    backend: str = "auto"):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    qh = q.swapaxes(1, 2)
+    kh = k.swapaxes(1, 2)
+    vh = v.swapaxes(1, 2)
+    if backend == "ref":
+        out = ref.mha_reference(qh, kh, vh, causal=causal, window=window,
+                                softcap=softcap, q_offset=q_offset)
+    else:
+        out = flash_attention_pallas(
+            qh, kh, vh, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, interpret=(backend == "interpret"),
+        )
+    return out.swapaxes(1, 2)

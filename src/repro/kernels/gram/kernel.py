@@ -1,0 +1,67 @@
+"""Pallas TPU kernel for the Gram reduction G = A^T A.
+
+This is the TPU-native core of the collaboration-representation protocol
+(DESIGN.md §3): instead of a tall-skinny SVD of the stacked anchor
+representations à (r × m̃, r ≫ m̃) — host-bound on TPU — we reduce to the
+m̃ × m̃ Gram matrix with an MXU-tiled accumulation and eigendecompose that
+(core/collab.py). rank-m̂ singular pairs of à are recovered from eigh(G).
+
+Grid: (m/BM, m/BN, r/BR) with the reduction axis innermost/sequential and a
+fp32 VMEM accumulator. BM=BN=BR=256 → blocks 3×256×256×4 = 768 KiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(a1_ref, a2_ref, o_ref, acc_scr):
+    ri = pl.program_id(2)
+    nr = pl.num_programs(2)
+
+    @pl.when(ri == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a1 = a1_ref[...].astype(jnp.float32)      # (BR, BM)
+    a2 = a2_ref[...].astype(jnp.float32)      # (BR, BN)
+    acc_scr[...] += jax.lax.dot_general(
+        a1, a2, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ri == nr - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_r", "interpret"))
+def gram_pallas(a, *, block_m: int = 256, block_r: int = 256,
+                interpret: bool = False):
+    """a: (r, m) -> A^T A (m, m) fp32. Pads r and m up to block multiples."""
+    r, m = a.shape
+    bm = min(block_m, m)
+    br = min(block_r, r)
+    pad_r = (-r) % br
+    pad_m = (-m) % bm
+    if pad_r or pad_m:
+        a = jnp.pad(a, ((0, pad_r), (0, pad_m)))
+    R, M = a.shape
+    grid = (M // bm, M // bm, R // br)
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bm), lambda mi, ni, ri: (ri, mi)),
+            pl.BlockSpec((br, bm), lambda mi, ni, ri: (ri, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda mi, ni, ri: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, M), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
+        interpret=interpret,
+    )(a, a)
+    return out[:m, :m]

@@ -1,0 +1,36 @@
+"""Public Gram-reduction wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import ref
+from repro.kernels.gram.kernel import gram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def gram(a, *, backend: str = "auto"):
+    """a: (r, m) -> A^T A in fp32."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.gram_reference(a)
+    return gram_pallas(a, interpret=(backend == "interpret"))
+
+
+def gram_eigh_topk(a, k: int, *, backend: str = "auto"):
+    """Rank-k left singular pairs of a (r, m) via the Gram route:
+    eigh(AᵀA) -> right vectors V, singular values s; U = A V / s.
+
+    Returns (U (r,k), s (k,), V (m,k)). Matches jnp.linalg.svd up to sign
+    for well-separated spectra (tested).
+    """
+    g = gram(a, backend=backend)
+    evals, evecs = jnp.linalg.eigh(g)                 # ascending
+    evals = evals[::-1][:k]
+    V = evecs[:, ::-1][:, :k]
+    s = jnp.sqrt(jnp.maximum(evals, 0.0))
+    U = (a.astype(jnp.float32) @ V) / jnp.maximum(s, 1e-12)[None, :]
+    return U, s, V

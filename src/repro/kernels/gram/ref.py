@@ -1,0 +1,10 @@
+"""Oracle for the Gram reduction: G = A^T A in fp32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_reference(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (r, m) -> (m, m) fp32."""
+    af = a.astype(jnp.float32)
+    return af.T @ af

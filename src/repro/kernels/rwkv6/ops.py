@@ -1,0 +1,47 @@
+"""jit'd public wrapper for WKV6: model-layout in/out, backend dispatch.
+
+On CPU (this container) the Pallas TPU kernel is executed in interpret mode
+for tests and the chunked jnp form is used for real training; on TPU the
+Pallas kernel is the default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def wkv6(r, k, v, log_w, u, *, chunk: int = 16, backend: str = "auto"):
+    """r/k/log_w: (B, S, H, K); v: (B, S, H, V); u: (H, K) -> (B, S, H, V) fp32.
+
+    backend: auto | pallas | interpret | chunked | scan
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "chunked"
+    if backend == "scan":
+        return ref.wkv6_scan(r, k, v, log_w, u)
+    if backend == "chunked":
+        return ref.wkv6_chunked(r, k, v, log_w, u, chunk=chunk)
+
+    def fold(t, last):
+        return t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, last)
+
+    rk = fold(r, K)
+    kk = fold(k, K)
+    vk = fold(v, V)
+    lw = fold(log_w, K)
+    uu = jnp.tile(u.astype(jnp.float32), (B, 1))
+    out = wkv6_pallas(rk, kk, vk, lw, uu, chunk=chunk,
+                      interpret=(backend == "interpret"))
+    return out.reshape(B, H, S, V).transpose(0, 2, 1, 3)

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+make_production_mesh is a FUNCTION (not a module constant) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax device query.
+
+Meshes (prescribed):
+  single-pod : (16, 16)    axes ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+FedDCL mapping (DESIGN.md §5): in federated mode the silo axis is "pod" on
+the multi-pod mesh (d = 2 DC-server groups, one per pod — cross-pod traffic
+only at round boundaries, riding the scarce DCI exactly as the paper's
+topology intends) and "data" on the single-pod mesh (d = 16 groups of one
+16-chip model-parallel row each).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1, data: Optional[int] = None):
+    """Small mesh over the actually-available devices (tests, examples)."""
+    n = jax.device_count()
+    data = data or (n // model)
+    assert data * model <= n
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def silo_axis_name(mesh) -> str:
+    return "pod" if "pod" in mesh.axis_names else "data"
+
+
+def num_silos(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes[silo_axis_name(mesh)]

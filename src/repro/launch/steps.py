@@ -1,0 +1,109 @@
+"""Step-function builders: baseline train step, FedDCL federated round,
+prefill step, serve (decode) step. These are what dryrun.py lowers and what
+train.py / serve.py execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.federated import fedavg_sync
+from repro.models import backbone as bb
+from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_with_warmup
+
+
+def make_optimizer(tc: TrainConfig):
+    sched = cosine_with_warmup(tc.learning_rate, tc.warmup_steps, tc.total_steps)
+    if tc.optimizer == "sgd":
+        return sgd(sched, momentum=0.9)
+    return adamw(sched, weight_decay=tc.weight_decay,
+                 state_dtype=jnp.dtype(tc.opt_state_dtype))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *,
+                    use_pallas: bool = False) -> Tuple[Callable, Any]:
+    """Baseline (non-federated) step: grads all-reduced over every data axis
+    each step — the communication pattern FedDCL's round schedule amortizes."""
+    opt = make_optimizer(tc)
+    compute_dtype = jnp.dtype(tc.compute_dtype)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return bb.loss_fn(p, batch, cfg, use_pallas=use_pallas,
+                              remat=tc.remat, compute_dtype=compute_dtype)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_federated_local_step(cfg: ModelConfig, tc: TrainConfig, *,
+                              use_pallas: bool = False) -> Tuple[Callable, Any]:
+    """FedDCL outer-tier LOCAL step: the baseline step vmapped over a leading
+    silo dim. With the silo dim sharded over the silo mesh axis, the lowered
+    HLO contains NO collective over that axis (tests assert this) — the
+    paper's 'no iterative cross-group communication' property, made
+    structural. The host loop runs H of these, then one fedavg_sync_step.
+
+    Inputs: silo_params/silo_opt_state with leading dim d; batch dict with
+    leading dims (d, local_batch, ...).
+    """
+    local_step, opt = make_train_step(cfg, tc, use_pallas=use_pallas)
+
+    def local_step_silo(p, o, b):
+        from repro.launch.mesh import silo_axis_name
+        from repro.models.moe_ep import _physical_mesh
+        from repro.shardingx.constrain import silo_context
+        mesh = _physical_mesh()
+        axis = silo_axis_name(mesh) if mesh is not None else None
+        with silo_context(axis):
+            return local_step(p, o, b)
+
+    return jax.vmap(local_step_silo), opt
+
+
+def make_fedavg_sync_step(tc: TrainConfig) -> Callable:
+    """Round boundary: average params across the silo dim (ONE all-reduce
+    over the silo mesh axis per leaf) and, per the paper, reset the local
+    optimizer state for the next round."""
+    def sync(silo_params, silo_opt_state):
+        p = fedavg_sync(silo_params)
+        if tc.federated.aggregator == "fedavg":
+            silo_opt_state = jax.tree.map(jnp.zeros_like, silo_opt_state)
+        return p, silo_opt_state
+
+    return sync
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int,
+                      compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                      use_pallas: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        logits, state, next_pos = bb.prefill(
+            params, batch["tokens"], cfg, cache_len=cache_len,
+            prefix_embeds=batch.get("prefix_embeds"),
+            compute_dtype=compute_dtype, cache_dtype=cache_dtype,
+            use_pallas=use_pallas)
+        return logits, state, next_pos
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16) -> Callable:
+    def serve_step(params, state, tokens, cur_pos):
+        return bb.decode_step(params, state, tokens, cur_pos, cfg,
+                              compute_dtype=compute_dtype)
+
+    return serve_step

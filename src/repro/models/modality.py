@@ -1,0 +1,37 @@
+"""Modality-frontend STUBS (the one sanctioned carve-out, see DESIGN.md §8).
+
+musicgen-large : EnCodec conditioning frames  -> (B, prefix_len, d_model)
+chameleon-34b  : ViT/VQ patch embeddings      -> (B, prefix_len, d_model)
+
+``synthetic_prefix`` produces statistically plausible stand-ins (unit-norm
+rows with smooth temporal/spatial correlation) for smoke tests and the
+end-to-end examples; ``prefix_spec`` produces the ShapeDtypeStruct used by
+the dry-run input_specs().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def prefix_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    assert cfg.prefix_frontend
+    return jax.ShapeDtypeStruct((batch, cfg.prefix_len, cfg.d_model), dtype)
+
+
+def synthetic_prefix(key, cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Smoothly correlated unit-variance embeddings: white noise passed
+    through a causal EMA over the frame/patch axis."""
+    assert cfg.prefix_frontend
+    noise = jax.random.normal(key, (batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+
+    def ema(carry, x):
+        h = 0.7 * carry + 0.3 * x
+        return h, h
+
+    _, smooth = jax.lax.scan(ema, jnp.zeros((batch, cfg.d_model)), noise.swapaxes(0, 1))
+    smooth = smooth.swapaxes(0, 1)
+    smooth = smooth / (jnp.std(smooth, axis=-1, keepdims=True) + 1e-6)
+    return smooth.astype(dtype)
