@@ -3,7 +3,14 @@ synthetic regression task — 4 user institutions in 2 groups, exactly the
 paper's Experiment I layout. Runs in ~10 s on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
+  FEDDCL_BACKEND=device PYTHONPATH=src python examples/quickstart.py
+
+FEDDCL_BACKEND selects the step-3 collaboration backend: "host" (serial
+NumPy float64, default) or "device" (batched jitted Gram+eigh and QR —
+DESIGN.md §3).
 """
+import os
+
 import numpy as np
 
 from repro.configs.feddcl_mlp import PAPER_MLPS
@@ -26,9 +33,11 @@ def main():
     Xs, Ys = split_iid(Xtr, Ytr, d=2, c=[2, 2], n_ij=100, seed=0)
 
     # ---- FedDCL steps 1-3: anchor, private maps, SVD alignment ----------
+    backend = os.environ.get("FEDDCL_BACKEND", "host")
     setup = protocol.run_protocol(Xs, Ys, m_tilde=cfg.reduced_dim,
-                                  anchor_r=2000, seed=0)
-    print("anchor:", setup.anchor.shape,
+                                  anchor_r=2000, seed=0,
+                                  svd_backend=backend)
+    print(f"collab backend: {backend} | anchor:", setup.anchor.shape,
           "| collab reps per group:", [x.shape for x in setup.collab_X])
 
     # ---- FedDCL step 4: FedAvg between the intra-group DC servers -------

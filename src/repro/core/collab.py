@@ -11,32 +11,156 @@ paper's construction C_1^(i) = Σ^(i) (V_{j'}^(i))ᵀ E_1 (random orthogonal E,
 randomly selected user block j'), falling back to a random orthogonal matrix
 when that product is singular/non-square.
 
-Backends: "host" (NumPy float64 LAPACK — faithful to the paper's MATLAB) and
-"tpu" (fp32 Gram reduction via the Pallas `gram` kernel + eigh — DESIGN.md §3
-hardware adaptation). Both are covered by agreement tests.
+Backends (`CollabBackend`, DESIGN.md §3):
+  "host"   — NumPy float64 LAPACK, faithful to the paper's MATLAB; serial
+             per-group SVDs and per-user `lstsq` calls.
+  "device" — device-resident batched engine: all groups go through ONE
+             batched fp32 Gram reduction + batched eigh (Pallas `gram`
+             kernel on TPU), and all users of the protocol go through ONE
+             jitted batched QR least-squares (`solve_G_batched`). Ragged
+             group/user widths are zero-padded to the max width.
+  "tpu"    — alias of "device" (legacy name).
+
+The obfuscation matrices C_1/C_2 are tiny (m̂ × m̂) and stay on host in both
+backends so the two paths share identical RNG streams; because B̃ = U C_1
+with C_1 = Σ V_blockᵀ E, per-pair sign flips between eigh- and SVD-derived
+factors cancel and the backends agree to fp32 accuracy (tested).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
 
 # --------------------------------------------------------------------------
-# rank-k SVD with backend dispatch
+# padded-ragged helpers
+# --------------------------------------------------------------------------
+
+def pad_ragged(mats: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack (r, w_b) matrices of ragged width into a zero-padded
+    (B, r, w_max) array + boolean column mask (B, w_max)."""
+    r = mats[0].shape[0]
+    w_max = max(m.shape[1] for m in mats)
+    out = np.zeros((len(mats), r, w_max), np.float32)
+    mask = np.zeros((len(mats), w_max), bool)
+    for b, m in enumerate(mats):
+        out[b, :, : m.shape[1]] = m
+        mask[b, : m.shape[1]] = True
+    return out, mask
+
+
+def _fix_signs(U: np.ndarray, s: np.ndarray, V: np.ndarray):
+    """Deterministic sign convention: make the max-|entry| of each V column
+    positive, flipping the (U, V) pair jointly. SVD/eigh factorisations are
+    only unique up to per-pair signs; pinning them makes every downstream
+    construction — including the non-V-dependent obfuscation fallback —
+    agree across backends instead of only the sign-invariant main branch."""
+    idx = np.argmax(np.abs(V), axis=0)
+    flip = np.sign(V[idx, np.arange(V.shape[1])])
+    flip = np.where(flip == 0, 1.0, flip)
+    return U * flip[None, :], s, V * flip[None, :]
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+class HostBackend:
+    """NumPy float64 LAPACK — the paper-faithful serial reference."""
+
+    name = "host"
+
+    def topk_svd(self, A: np.ndarray, k: int):
+        k = int(min(k, *A.shape))
+        U, s, Vt = np.linalg.svd(np.asarray(A, np.float64), full_matrices=False)
+        return _fix_signs(U[:, :k], s[:k], Vt[:k].T)
+
+    def topk_svd_many(self, mats: Sequence[np.ndarray], k: int):
+        return [self.topk_svd(A, k) for A in mats]
+
+    def solve_G_many(self, anchors: Sequence[np.ndarray],
+                     Z: np.ndarray) -> List[np.ndarray]:
+        return [solve_G(A, Z) for A in anchors]
+
+
+class DeviceBackend:
+    """Jitted batched path: one Gram+eigh launch for all groups, one QR
+    solve for all users. fp32 on-device; outputs returned as NumPy."""
+
+    name = "device"
+
+    def __init__(self, ridge: float = 0.0):
+        # relative Tikhonov strength for solve_G_batched; 0.0 keeps exact
+        # lstsq agreement and requires full-column-rank anchors (the
+        # protocol's generic case) — pass e.g. 1e-3 via
+        # get_backend(collab.DeviceBackend(ridge=...)) for degenerate data
+        self.ridge = float(ridge)
+
+    def topk_svd(self, A: np.ndarray, k: int):
+        return self.topk_svd_many([np.asarray(A)], k)[0]
+
+    def topk_svd_many(self, mats: Sequence[np.ndarray], k: int):
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        padded, _ = pad_ragged(mats)
+        # batch at the widest feasible rank, then clamp per matrix exactly
+        # like HostBackend.topk_svd (min(k, *A.shape)) — for a narrower
+        # matrix the slots past its width hold zero-eigenvalue pairs, so
+        # slicing the leading k_b columns recovers its own top-k.
+        k_eff = int(min(k, padded.shape[1], padded.shape[2]))
+        U, s, V = gram_ops.gram_eigh_topk_batched(jnp.asarray(padded), k_eff)
+        U, s, V = np.asarray(U), np.asarray(s), np.asarray(V)
+        out = []
+        for b, m in enumerate(mats):
+            k_b = int(min(k, *m.shape))
+            out.append(_fix_signs(U[b][:, :k_b], s[b][:k_b],
+                                  V[b, : m.shape[1], :k_b]))
+        return out
+
+    def solve_G_many(self, anchors: Sequence[np.ndarray],
+                     Z: np.ndarray) -> List[np.ndarray]:
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        padded, mask = pad_ragged(anchors)
+        G = gram_ops.solve_G_batched(jnp.asarray(padded),
+                                     jnp.asarray(Z, jnp.float32),
+                                     jnp.asarray(mask), ridge=self.ridge)
+        G = np.asarray(G)
+        if not np.all(np.isfinite(G)):
+            bad = [b for b in range(len(anchors))
+                   if not np.all(np.isfinite(G[b]))]
+            raise FloatingPointError(
+                f"device least-squares produced non-finite G for users {bad}: "
+                "anchor columns are (near-)collinear, which the QR path "
+                "cannot handle at ridge=0 — use collab.DeviceBackend("
+                "ridge=1e-3) as svd_backend, or svd_backend='host'")
+        return [G[b, : a.shape[1]] for b, a in enumerate(anchors)]
+
+
+_BACKENDS = {"host": HostBackend, "device": DeviceBackend, "tpu": DeviceBackend}
+
+
+def get_backend(name: str):
+    """Resolve a backend name ("host" | "device" | "tpu") or pass through an
+    object already implementing the CollabBackend protocol."""
+    if isinstance(name, str):
+        try:
+            return _BACKENDS[name]()
+        except KeyError:
+            raise ValueError(
+                f"unknown collab backend {name!r}; choose from {sorted(_BACKENDS)}")
+    return name
+
+
+# --------------------------------------------------------------------------
+# rank-k SVD with backend dispatch (legacy single-matrix entry point)
 # --------------------------------------------------------------------------
 
 def topk_svd(A: np.ndarray, k: int, backend: str = "host"):
     """Rank-k thin SVD. Returns (U (n,k), s (k,), V (m,k))."""
-    k = int(min(k, *A.shape))
-    if backend == "tpu":
-        import jax.numpy as jnp
-        from repro.kernels.gram import ops as gram_ops
-        U, s, V = gram_ops.gram_eigh_topk(jnp.asarray(A, jnp.float32), k)
-        return np.asarray(U), np.asarray(s), np.asarray(V)
-    U, s, Vt = np.linalg.svd(np.asarray(A, np.float64), full_matrices=False)
-    return U[:, :k], s[:k], Vt[:k].T
+    return get_backend(backend).topk_svd(A, k)
 
 
 def _random_orthogonal(rng, k: int) -> np.ndarray:
@@ -75,14 +199,35 @@ class CentralTarget:
     Z: np.ndarray                       # (r, m̂) = P C_2
 
 
+def _basis_from_svd(svd, rng, block_cols: Sequence[int]) -> GroupBasis:
+    U, s, V = svd
+    C1 = _obfuscation(rng, s, V, block_cols, U.shape[1])
+    return GroupBasis(B=U @ C1)
+
+
 def intra_group_basis(anchors: List[np.ndarray], m_hat_i: int, seed: int,
                       backend: str = "host") -> GroupBasis:
     """Eq. (1) on DC server i. anchors: per-user Ã_j^(i) of shape (r, m̃_ij)."""
     rng = np.random.default_rng(seed)
     A = np.concatenate(anchors, axis=1)               # (r, Σ m̃)
-    U, s, V = topk_svd(A, m_hat_i, backend)
-    C1 = _obfuscation(rng, s, V, [a.shape[1] for a in anchors], U.shape[1])
-    return GroupBasis(B=U @ C1)
+    svd = get_backend(backend).topk_svd(A, m_hat_i)
+    return _basis_from_svd(svd, rng, [a.shape[1] for a in anchors])
+
+
+def intra_group_bases(anchor_groups: Sequence[Sequence[np.ndarray]],
+                      m_hat: int, seeds: Sequence[int],
+                      backend: str = "host") -> List[GroupBasis]:
+    """Eq. (1) for ALL d DC servers at once. On the device backend the d
+    stacked-anchor matrices (ragged widths, zero-padded) go through a single
+    batched Gram+eigh launch; on host this is the serial per-group loop."""
+    be = get_backend(backend)
+    stacked = [np.concatenate(list(g), axis=1) for g in anchor_groups]
+    svds = be.topk_svd_many(stacked, m_hat)
+    return [
+        _basis_from_svd(svd, np.random.default_rng(seed),
+                        [a.shape[1] for a in group])
+        for svd, seed, group in zip(svds, seeds, anchor_groups)
+    ]
 
 
 def central_target(bases: List[GroupBasis], m_hat: int, seed: int,
@@ -90,7 +235,7 @@ def central_target(bases: List[GroupBasis], m_hat: int, seed: int,
     """Eq. (2) on the central FL server."""
     rng = np.random.default_rng(seed)
     B = np.concatenate([b.B for b in bases], axis=1)  # (r, Σ m̂_i)
-    P, D, Q = topk_svd(B, m_hat, backend)
+    P, D, Q = get_backend(backend).topk_svd(B, m_hat)
     C2 = _obfuscation(rng, D, Q, [b.B.shape[1] for b in bases], P.shape[1])
     return CentralTarget(Z=P @ C2)
 
@@ -99,6 +244,14 @@ def solve_G(anchor_j: np.ndarray, Z: np.ndarray) -> np.ndarray:
     """Eq. (3): G = argmin ‖Ã_j G − Z‖_F via least squares."""
     G, *_ = np.linalg.lstsq(anchor_j, Z, rcond=None)
     return G
+
+
+def solve_G_all(anchors: Sequence[np.ndarray], Z: np.ndarray,
+                backend: str = "host") -> List[np.ndarray]:
+    """Eq. (3) for a flat list of users. The device backend pads the ragged
+    anchor widths and answers with ONE batched QR solve — zero per-user
+    `lstsq` calls."""
+    return get_backend(backend).solve_G_many(anchors, Z)
 
 
 def alignment_residual(anchor_j: np.ndarray, G: np.ndarray,

@@ -68,6 +68,7 @@ class FedDCLSetup:
     collab_Y: List[np.ndarray]                   # Y^(i) per group
     comm: CommLog
     m_hat: int
+    Z: Optional[np.ndarray] = None               # central target (r, m̂)
 
     def user_transform(self, i: int, j: int) -> Callable[[np.ndarray], np.ndarray]:
         """x -> f_j^(i)(x) G_j^(i) — the per-user input map of the final
@@ -90,7 +91,13 @@ def run_protocol(
     fixed_W: Optional[np.ndarray] = None,
 ) -> FedDCLSetup:
     """Steps 1–3 + 12 of Algorithm 1 (everything except the FL training,
-    which core/federated.run_federated performs on the returned collab_X)."""
+    which core/federated.run_federated performs on the returned collab_X).
+
+    `svd_backend` selects the step-3 engine (collab.CollabBackend):
+    "host" is the serial NumPy float64 reference; "device" (alias "tpu")
+    runs one batched Gram+eigh launch for all d groups and one batched QR
+    least-squares for all users — no per-group or per-user Python-loop
+    linear algebra on the hot path."""
     d = len(Xs)
     m = Xs[0][0].shape[1]
     m_hat = m_hat or m_tilde
@@ -121,11 +128,12 @@ def run_protocol(
         inter_A.append(row_a)
 
     # ---- Step 3a: intra-group bases -> central server --------------------
-    bases = []
-    for i in range(d):
-        gb = collab.intra_group_basis(inter_A[i], m_hat, seed * 31 + i,
-                                      backend=svd_backend)
-        bases.append(gb)
+    # One batched Gram+eigh launch for all d groups on the device backend
+    # (zero-padded to the max group width); serial LAPACK loop on host.
+    bases = collab.intra_group_bases(
+        inter_A, m_hat, seeds=[seed * 31 + i for i in range(d)],
+        backend=svd_backend)
+    for i, gb in enumerate(bases):
         comm.log(f"dc({i})", "fl", "B~", gb.B)
 
     # ---- Step 3b: central target Z -> DC servers --------------------------
@@ -134,12 +142,16 @@ def run_protocol(
         comm.log("fl", f"dc({i})", "Z", target.Z)
 
     # ---- Step 3c + 12: per-user G, collaboration representations ----------
+    # All users of the protocol solved in ONE batched QR call on device.
+    flat_A = [inter_A[i][j] for i in range(d) for j in range(len(Xs[i]))]
+    flat_G = collab.solve_G_all(flat_A, target.Z, backend=svd_backend)
     Gs: List[List[np.ndarray]] = []
     collab_X: List[np.ndarray] = []
     collab_Y: List[np.ndarray] = []
+    k = 0
     for i in range(d):
-        row_g = [collab.solve_G(inter_A[i][j], target.Z)
-                 for j in range(len(Xs[i]))]
+        row_g = flat_G[k:k + len(Xs[i])]
+        k += len(Xs[i])
         Gs.append(row_g)
         collab_X.append(np.concatenate(
             [inter_X[i][j] @ row_g[j] for j in range(len(Xs[i]))], axis=0))
@@ -147,7 +159,7 @@ def run_protocol(
 
     return FedDCLSetup(anchor=anchor, mappings=mappings, Gs=Gs,
                        collab_X=collab_X, collab_Y=collab_Y, comm=comm,
-                       m_hat=m_hat)
+                       m_hat=m_hat, Z=target.Z)
 
 
 def finalize_user_models(setup: FedDCLSetup, h: Callable[[np.ndarray], np.ndarray],

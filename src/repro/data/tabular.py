@@ -17,6 +17,7 @@ EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
@@ -76,7 +77,9 @@ _SPECS: Dict[str, Dict] = {
 def make_dataset(name: str, n: int, seed: int = 0) -> Dataset:
     cfg = PAPER_MLPS[name]
     spec = _SPECS[name]
-    rng = np.random.default_rng(seed ^ hash(name) % (2**31))
+    # zlib.crc32, not hash(): str hashing is salted per process
+    # (PYTHONHASHSEED), which made every process draw a different dataset
+    rng = np.random.default_rng(seed ^ zlib.crc32(name.encode()) % (2**31))
     if spec["classes"] is None:
         X, Y = _latent_regression(rng, n, cfg.in_dim, spec["latent"],
                                   noise=spec["noise"])

@@ -6,8 +6,13 @@ representations à (r × m̃, r ≫ m̃) — host-bound on TPU — we reduce to 
 m̃ × m̃ Gram matrix with an MXU-tiled accumulation and eigendecompose that
 (core/collab.py). rank-m̂ singular pairs of à are recovered from eigh(G).
 
-Grid: (m/BM, m/BN, r/BR) with the reduction axis innermost/sequential and a
-fp32 VMEM accumulator. BM=BN=BR=256 → blocks 3×256×256×4 = 768 KiB VMEM.
+`gram_batched_pallas` is the one kernel: it computes A_b^T A_b for a whole
+stack of (group- or user-) matrices in a single launch — grid
+(B, m/BM, m/BN, r/BR) with the batch index outermost and the reduction axis
+innermost/sequential over a fp32 VMEM accumulator, so each batch element
+reuses the same MXU-tiled reduction and the per-call dispatch overhead is
+paid once instead of B times. BM=BN=BR=256 → blocks 3×256×256×4 = 768 KiB
+VMEM. The single-matrix `gram_pallas` is the B=1 special case.
 """
 from __future__ import annotations
 
@@ -19,49 +24,58 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gram_kernel(a1_ref, a2_ref, o_ref, acc_scr):
-    ri = pl.program_id(2)
-    nr = pl.num_programs(2)
+def _gram_batched_kernel(a1_ref, a2_ref, o_ref, acc_scr):
+    ri = pl.program_id(3)
+    nr = pl.num_programs(3)
 
     @pl.when(ri == 0)
     def _init():
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    a1 = a1_ref[...].astype(jnp.float32)      # (BR, BM)
-    a2 = a2_ref[...].astype(jnp.float32)      # (BR, BN)
+    a1 = a1_ref[0].astype(jnp.float32)        # (BR, BM)
+    a2 = a2_ref[0].astype(jnp.float32)        # (BR, BN)
     acc_scr[...] += jax.lax.dot_general(
         a1, a2, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
 
     @pl.when(ri == nr - 1)
     def _finish():
-        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_r", "interpret"))
-def gram_pallas(a, *, block_m: int = 256, block_r: int = 256,
-                interpret: bool = False):
-    """a: (r, m) -> A^T A (m, m) fp32. Pads r and m up to block multiples."""
-    r, m = a.shape
+def gram_batched_pallas(a, *, block_m: int = 256, block_r: int = 256,
+                        interpret: bool = False):
+    """a: (B, r, m) -> stacked A_b^T A_b (B, m, m) fp32, one launch.
+    Pads r and m up to block multiples."""
+    b, r, m = a.shape
     bm = min(block_m, m)
     br = min(block_r, r)
     pad_r = (-r) % br
     pad_m = (-m) % bm
     if pad_r or pad_m:
-        a = jnp.pad(a, ((0, pad_r), (0, pad_m)))
-    R, M = a.shape
-    grid = (M // bm, M // bm, R // br)
+        a = jnp.pad(a, ((0, 0), (0, pad_r), (0, pad_m)))
+    _, R, M = a.shape
+    grid = (b, M // bm, M // bm, R // br)
 
     out = pl.pallas_call(
-        _gram_kernel,
+        _gram_batched_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((br, bm), lambda mi, ni, ri: (ri, mi)),
-            pl.BlockSpec((br, bm), lambda mi, ni, ri: (ri, ni)),
+            pl.BlockSpec((1, br, bm), lambda bi, mi, ni, ri: (bi, ri, mi)),
+            pl.BlockSpec((1, br, bm), lambda bi, mi, ni, ri: (bi, ri, ni)),
         ],
-        out_specs=pl.BlockSpec((bm, bm), lambda mi, ni, ri: (mi, ni)),
-        out_shape=jax.ShapeDtypeStruct((M, M), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm, bm), lambda bi, mi, ni, ri: (bi, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, M, M), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
         interpret=interpret,
     )(a, a)
-    return out[:m, :m]
+    return out[:, :m, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_r", "interpret"))
+def gram_pallas(a, *, block_m: int = 256, block_r: int = 256,
+                interpret: bool = False):
+    """a: (r, m) -> A^T A (m, m) fp32 — the B=1 case of the batched kernel."""
+    return gram_batched_pallas(a[None], block_m=block_m, block_r=block_r,
+                               interpret=interpret)[0]

@@ -1,4 +1,18 @@
-"""Public Gram-reduction wrapper with backend dispatch."""
+"""Public Gram-reduction wrappers with backend dispatch.
+
+Single-matrix entry points (`gram`, `gram_eigh_topk`) serve the legacy
+one-group-at-a-time path; the batched entry points (`gram_batched`,
+`gram_eigh_topk_batched`, `solve_G_batched`) are the device-resident
+collaboration engine: every group (or every user) is a slice of one stacked,
+zero-padded array and the whole of FedDCL step 3 runs in a handful of jitted
+calls instead of Python loops.
+
+Padded-ragged convention (see DESIGN.md): ragged stacks are zero-padded on
+the trailing column axis up to the max width. Zero columns are harmless for
+the Gram route — AᵀA acquires zero rows/cols, eigh keeps them in the null
+space, and the top-k eigenpairs of the real block are untouched. For least
+squares they are handled explicitly via `col_mask` (see `solve_G_batched`).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,30 +21,107 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gram import ref
-from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.kernel import gram_batched_pallas, gram_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def gram(a, *, backend: str = "auto"):
     """a: (r, m) -> A^T A in fp32."""
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    backend = _resolve(backend)
     if backend == "ref":
         return ref.gram_reference(a)
     return gram_pallas(a, interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def gram_batched(a, *, backend: str = "auto"):
+    """a: (B, r, m) -> stacked A_b^T A_b (B, m, m) fp32 in ONE dispatch."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.gram_batched_reference(a)
+    return gram_batched_pallas(a, interpret=(backend == "interpret"))
 
 
 def gram_eigh_topk(a, k: int, *, backend: str = "auto"):
     """Rank-k left singular pairs of a (r, m) via the Gram route:
     eigh(AᵀA) -> right vectors V, singular values s; U = A V / s.
 
-    Returns (U (r,k), s (k,), V (m,k)). Matches jnp.linalg.svd up to sign
-    for well-separated spectra (tested).
+    Returns (U (r,k), s (k,), V (m,k)) — the B=1 case of the batched
+    recovery. Matches jnp.linalg.svd up to sign for well-separated
+    spectra (tested).
     """
-    g = gram(a, backend=backend)
-    evals, evecs = jnp.linalg.eigh(g)                 # ascending
-    evals = evals[::-1][:k]
-    V = evecs[:, ::-1][:, :k]
-    s = jnp.sqrt(jnp.maximum(evals, 0.0))
-    U = (a.astype(jnp.float32) @ V) / jnp.maximum(s, 1e-12)[None, :]
+    U, s, V = gram_eigh_topk_batched(a[None], k, backend=backend)
+    return U[0], s[0], V[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def gram_eigh_topk_batched(a, k: int, *, backend: str = "auto"):
+    """Batched rank-k singular recovery: a (B, r, m) -> (U (B,r,k),
+    s (B,k), V (B,m,k)) — one batched Gram reduction + one batched eigh.
+
+    Zero-padded columns contribute zero eigenvalues and never reach the
+    top-k slots as long as k ≤ rank of the real block.
+    """
+    g = gram_batched(a, backend=backend)              # (B, m, m)
+    evals, evecs = jnp.linalg.eigh(g)                 # ascending, batched
+    evals = evals[:, ::-1][:, :k]
+    V = evecs[:, :, ::-1][:, :, :k]                   # (B, m, k)
+    s = jnp.sqrt(jnp.maximum(evals, 0.0))             # (B, k)
+    U = jnp.einsum("brm,bmk->brk", a.astype(jnp.float32), V)
+    U = U / jnp.maximum(s, 1e-12)[:, None, :]
     return U, s, V
+
+
+@jax.jit
+def solve_G_batched(a, z, col_mask=None, ridge: float = 0.0):
+    """Batched eq. (3): G_b = argmin ‖A_b G − Z_b‖_F for a whole stack of
+    users in one jitted QR solve.
+
+    a:        (B, r, m_max) anchors, zero-padded on the column axis
+    z:        (r, m_hat) shared target, or (B, r, m_hat) per-batch targets
+    col_mask: (B, m_max) with True on REAL columns (None = all real)
+    ridge:    relative Tikhonov strength (see below); 0.0 = exact lstsq
+
+    Returns G (B, m_max, m_hat) with exact zero rows at padded positions.
+
+    Padded columns would make the QR factor singular, so the system is
+    augmented with m_max extra rows holding diag(1 − mask): the objective
+    becomes ‖A_real G_real − Z‖² + Σ_padded G_k², whose minimiser is the
+    plain least-squares solution on real columns and 0 on padded rows
+    (cross terms vanish because padded columns of A are exactly zero).
+    Unlike normal equations this does not square the condition number.
+
+    QR without pivoting requires the REAL columns to be full rank — the
+    protocol guarantees this generically (anchors are random full-rank
+    matrices through injective maps), but exactly collinear anchor columns
+    would blow the triangular solve up where host lstsq returns the bounded
+    min-norm solution. For such degenerate inputs pass ridge > 0 (e.g.
+    1e-3): the real-column augmentation rows become
+    ridge · max_colnorm(A_b) · I, bounding ‖G‖ by ~‖Z‖/(ridge·scale) at
+    the cost of an O(ridge²·κ²) relative perturbation on well-conditioned
+    directions.
+    """
+    a = a.astype(jnp.float32)
+    b, r, m_max = a.shape
+    if z.ndim == 2:
+        z = jnp.broadcast_to(z[None], (b,) + z.shape)
+    z = z.astype(jnp.float32)
+    if col_mask is None:
+        col_mask = jnp.ones((b, m_max), dtype=bool)
+    maskf = col_mask.astype(jnp.float32)              # (B, m_max)
+    scale = jnp.sqrt(jnp.max(jnp.sum(a * a, axis=1), axis=-1))  # (B,)
+    diag = (1.0 - maskf) + maskf * (ridge * scale[:, None])
+    aug = diag[:, :, None] * jnp.eye(m_max, dtype=jnp.float32)[None]
+    a_aug = jnp.concatenate([a, aug], axis=1)         # (B, r+m_max, m_max)
+    z_aug = jnp.concatenate(
+        [z, jnp.zeros((b, m_max, z.shape[-1]), z.dtype)], axis=1)
+    q, rr = jnp.linalg.qr(a_aug)                      # reduced, batched
+    rhs = jnp.einsum("bnm,bnh->bmh", q, z_aug)
+    G = jax.scipy.linalg.solve_triangular(rr, rhs, lower=False)
+    return G * col_mask[:, :, None]

@@ -8,3 +8,9 @@ def gram_reference(a: jnp.ndarray) -> jnp.ndarray:
     """a: (r, m) -> (m, m) fp32."""
     af = a.astype(jnp.float32)
     return af.T @ af
+
+
+def gram_batched_reference(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (B, r, m) -> (B, m, m) fp32."""
+    af = a.astype(jnp.float32)
+    return jnp.einsum("brm,brn->bmn", af, af)

@@ -1,0 +1,74 @@
+"""Property-testing shim: use `hypothesis` when installed, otherwise degrade
+`@given` strategies to deterministic seeded `pytest.mark.parametrize` cases so
+the tier-1 suite collects and runs in a clean environment.
+
+Usage in test modules (instead of importing hypothesis directly):
+
+    from _prop import given, settings, st
+
+The fallback supports exactly the strategy surface the suite uses —
+`st.integers`, `st.floats`, `st.sampled_from` — and draws a fixed number of
+examples from a fixed-seed generator, so the degraded cases are stable across
+runs and machines.
+"""
+from __future__ import annotations
+
+HAVE_HYPOTHESIS = True
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+    import pytest
+
+    _FALLBACK_EXAMPLES = 10
+    _FALLBACK_SEED = 0xFEDDC1
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _StrategyNamespace:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _StrategyNamespace()
+
+    def settings(*args, **kwargs):
+        """No-op decorator factory (deadline/max_examples are hypothesis
+        concerns; the fallback always draws _FALLBACK_EXAMPLES cases)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            rng = np.random.default_rng(_FALLBACK_SEED)
+            cases, seen = [], set()
+            for _ in range(_FALLBACK_EXAMPLES):
+                case = tuple(strategies[n].draw(rng) for n in names)
+                if case not in seen:        # dedupe e.g. small sampled_from
+                    seen.add(case)
+                    cases.append(case[0] if len(names) == 1 else case)
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco

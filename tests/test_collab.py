@@ -2,7 +2,7 @@
 backend agreement, least-squares correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import collab
 from repro.core.mappings import fit_mapping
