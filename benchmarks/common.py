@@ -22,10 +22,16 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
                     rounds: int = 20, local_epochs: int = 4, epochs: int = 40,
                     n_test: int = 1000, seed: int = 0, lr: float = 1e-3,
                     non_iid: bool = False, dirichlet_alpha: float = 0.5,
-                    methods=None, track_rounds: bool = False) -> Dict:
+                    methods=None, track_rounds: bool = False,
+                    engine: str = "host", svd_backend: str = "host") -> Dict:
     """Returns {"metrics": {method: test metric}, "curves": {...}, "task": str}.
     Paper setup: batch 32; Centralized/Local/DC train `epochs`; FedAvg/FedDCL
-    run `rounds` rounds × `local_epochs` epochs (§4.1)."""
+    run `rounds` rounds × `local_epochs` epochs (§4.1).
+
+    All five methods train through the ONE federated engine
+    (core/federated.py): `engine` selects the per-batch-dispatch host loop
+    or the fully compiled lax.scan program; `svd_backend` selects the step-3
+    collaboration backend for FedDCL (DESIGN.md §3)."""
     cfg = PAPER_MLPS[dataset]
     methods = methods or ["Centralized", "Local", "FedAvg", "DC", "FedDCL"]
     n_train = d * c * n_ij
@@ -38,7 +44,7 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
         Xs, Ys = split_iid(Xtr, Ytr, d, [c] * d, n_ij, seed=seed)
     task = cfg.task
     key = jax.random.PRNGKey(seed)
-    loss = lambda p, x, y: mlp.mlp_loss(p, x, y, task)
+    loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, task)
     Xte_j, Yte_j = jnp.asarray(Xte), jnp.asarray(Yte)
 
     def metric(p, X=Xte_j):
@@ -54,7 +60,8 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             p = mlp.for_config(key, cfg, reduced=False)
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
             p, hist = baselines.sgd_train(loss, p, Xtr, Ytr, opt=adamw(lr),
-                                          epochs=epochs, eval_fn=ev)
+                                          epochs=epochs, eval_fn=ev,
+                                          engine=engine)
             out[method] = metric(p)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
@@ -63,7 +70,7 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
             p, hist = baselines.sgd_train(loss, p, Xs[0][0], Ys[0][0],
                                           opt=adamw(lr), epochs=epochs,
-                                          eval_fn=ev)
+                                          eval_fn=ev, engine=engine)
             out[method] = metric(p)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
@@ -72,7 +79,8 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             flat = [(Xs[i][j], Ys[i][j]) for i in range(d) for j in range(c)]
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
             res = run_federated(loss, p, flat, opt=adamw(lr), rounds=rounds,
-                                local_epochs=local_epochs, eval_fn=ev)
+                                local_epochs=local_epochs, eval_fn=ev,
+                                engine=engine)
             out[method] = metric(res.params)
             if track_rounds:
                 curves[method] = [h["metric"] for h in res.history]
@@ -86,21 +94,23 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             ev = (lambda pp: {"metric": metric(pp, Xte_dc)}) if track_rounds else None
             p, hist = baselines.sgd_train(loss, p, np.concatenate(collabX),
                                           np.concatenate(flatY), opt=adamw(lr),
-                                          epochs=epochs, eval_fn=ev)
+                                          epochs=epochs, eval_fn=ev,
+                                          engine=engine)
             out[method] = metric(p, Xte_dc)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
         elif method == "FedDCL":
             setup = protocol.run_protocol(Xs, Ys, m_tilde=cfg.reduced_dim,
-                                          anchor_r=2000, seed=seed)
+                                          anchor_r=2000, seed=seed,
+                                          svd_backend=svd_backend)
             p = mlp.for_config(key, cfg, reduced=True)
             tr = setup.user_transform(0, 0)
             Xte_f = jnp.asarray(np.asarray(tr(Xte)))
             ev = (lambda pp: {"metric": metric(pp, Xte_f)}) if track_rounds else None
-            res = run_federated(loss, p,
-                                list(zip(setup.collab_X, setup.collab_Y)),
+            res = run_federated(loss, p, setup.fed_silos(),
                                 opt=adamw(lr), rounds=rounds,
-                                local_epochs=local_epochs, eval_fn=ev)
+                                local_epochs=local_epochs, eval_fn=ev,
+                                engine=engine)
             out[method] = metric(res.params, Xte_f)
             if track_rounds:
                 curves[method] = [h["metric"] for h in res.history]

@@ -22,7 +22,8 @@ def evaluate(params, X, Y, task):
     return mlp.mlp_metric(params, jnp.asarray(X), jnp.asarray(Y), task)
 
 
-def run(dataset: str, d: int = 5, c: int = 4, n_ij: int = 100, seed: int = 0):
+def run(dataset: str, d: int = 5, c: int = 4, n_ij: int = 100, seed: int = 0,
+        engine: str = "host"):
     cfg = PAPER_MLPS[dataset]
     n_train = d * c * n_ij
     ds = make_dataset(dataset, n=n_train + 1200, seed=seed)
@@ -30,25 +31,29 @@ def run(dataset: str, d: int = 5, c: int = 4, n_ij: int = 100, seed: int = 0):
     Xs, Ys = split_iid(Xtr, Ytr, d=d, c=[c] * d, n_ij=n_ij, seed=seed)
     task = cfg.task
     key = jax.random.PRNGKey(seed)
-    loss = lambda p, x, y: mlp.mlp_loss(p, x, y, task)
+    # per-example losses let the ONE federated engine mask ragged/padded
+    # silos (core/federated.py); engine='scan' compiles each trainer run
+    # into a single dispatch
+    loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, task)
     results = {}
 
     # Centralized (shares raw data; upper baseline)
     p = mlp.for_config(key, cfg, reduced=False)
-    p, _ = baselines.sgd_train(loss, p, Xtr, Ytr, opt=adamw(1e-3), epochs=40)
+    p, _ = baselines.sgd_train(loss, p, Xtr, Ytr, opt=adamw(1e-3), epochs=40,
+                               engine=engine)
     results["Centralized"] = evaluate(p, Xte, Yte, task)
 
     # Local (single institution)
     p = mlp.for_config(key, cfg, reduced=False)
     p, _ = baselines.sgd_train(loss, p, Xs[0][0], Ys[0][0], opt=adamw(1e-3),
-                               epochs=40)
+                               epochs=40, engine=engine)
     results["Local"] = evaluate(p, Xte, Yte, task)
 
     # FedAvg over all c·d institutions on raw features
     p = mlp.for_config(key, cfg, reduced=False)
     flat = [(Xs[i][j], Ys[i][j]) for i in range(d) for j in range(len(Xs[i]))]
     res = run_federated(loss, p, flat, opt=adamw(1e-3), rounds=20,
-                        local_epochs=4)
+                        local_epochs=4, engine=engine)
     results["FedAvg"] = evaluate(res.params, Xte, Yte, task)
 
     # DC (conventional single-server data collaboration)
@@ -58,14 +63,16 @@ def run(dataset: str, d: int = 5, c: int = 4, n_ij: int = 100, seed: int = 0):
                                            seed=seed)
     p = mlp.for_config(key, cfg, reduced=True)
     p, _ = baselines.sgd_train(loss, p, np.concatenate(collabX),
-                               np.concatenate(flatY), opt=adamw(1e-3), epochs=40)
+                               np.concatenate(flatY), opt=adamw(1e-3), epochs=40,
+                               engine=engine)
     results["DC"] = evaluate(p, np.asarray(maps[0](Xte) @ Gs[0]), Yte, task)
 
     # FedDCL (this paper)
     setup = protocol.run_protocol(Xs, Ys, m_tilde=cfg.reduced_dim, seed=seed)
     p = mlp.for_config(key, cfg, reduced=True)
-    res = run_federated(loss, p, list(zip(setup.collab_X, setup.collab_Y)),
-                        opt=adamw(1e-3), rounds=20, local_epochs=4)
+    res = run_federated(loss, p, setup.fed_silos(),
+                        opt=adamw(1e-3), rounds=20, local_epochs=4,
+                        engine=engine)
     tr = setup.user_transform(0, 0)
     results["FedDCL"] = evaluate(res.params, np.asarray(tr(Xte)), Yte, task)
 
@@ -80,5 +87,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="battery_small",
                     choices=sorted(PAPER_MLPS))
+    ap.add_argument("--engine", default="host", choices=["host", "scan"])
     args = ap.parse_args()
-    run(args.dataset)
+    run(args.dataset, engine=args.engine)

@@ -7,7 +7,9 @@ paper's Experiment I layout. Runs in ~10 s on CPU.
 
 FEDDCL_BACKEND selects the step-3 collaboration backend: "host" (serial
 NumPy float64, default) or "device" (batched jitted Gram+eigh and QR —
-DESIGN.md §3).
+DESIGN.md §3). FEDDCL_ENGINE selects the step-4 federated engine: "host"
+(per-batch dispatch reference) or "scan" (the whole FL phase as one
+compiled lax.scan program — DESIGN.md §4).
 """
 import os
 
@@ -41,12 +43,15 @@ def main():
           "| collab reps per group:", [x.shape for x in setup.collab_X])
 
     # ---- FedDCL step 4: FedAvg between the intra-group DC servers -------
+    # per-example loss lets the engine zero-pad + mask ragged silos;
+    # FEDDCL_ENGINE=scan compiles all 20 rounds into ONE device dispatch
     params = mlp.for_config(jax.random.PRNGKey(0), cfg, reduced=True)
-    loss = lambda p, x, y: mlp.mlp_loss(p, x, y, cfg.task)
+    loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, cfg.task)
+    engine = os.environ.get("FEDDCL_ENGINE", "host")
     res = run_federated(
-        loss, params,
-        list(zip(setup.collab_X, setup.collab_Y)),
-        opt=adamw(1e-3), rounds=20, local_epochs=4, batch_size=32)
+        loss, params, setup.fed_silos(),
+        opt=adamw(1e-3), rounds=20, local_epochs=4, batch_size=32,
+        engine=engine)
 
     # ---- step 5: per-user integrated model t(X) = h(f(X) G) -------------
     h = lambda Z: mlp.mlp_forward(res.params, jnp.asarray(Z))

@@ -10,43 +10,33 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import collab
 from repro.core.anchor import make_anchor
+from repro.core.federated import run_federated
 from repro.core.mappings import fit_mapping
-from repro.optim import Optimizer, apply_updates
+from repro.optim import Optimizer
 
 
 def sgd_train(loss_fn, params, X, Y, *, opt: Optimizer, epochs: int,
               batch_size: int = 32, seed: int = 0,
-              eval_fn: Optional[Callable] = None) -> Tuple[dict, List[Dict]]:
-    """Plain minibatch training used by Centralized / Local / DC."""
-    rng = np.random.default_rng(seed)
-    opt_state = opt.init(params)
-
-    @jax.jit
-    def step(p, s, x, y):
-        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
-        updates, s = opt.update(grads, s, p)
-        return apply_updates(p, updates), s, loss
-
-    n = X.shape[0]
-    history = []
-    for ep in range(epochs):
-        perm = rng.permutation(n)
-        last = 0.0
-        for s0 in range(0, n, batch_size):
-            sl = perm[s0 : s0 + batch_size]
-            params, opt_state, last = step(params, opt_state,
-                                           jnp.asarray(X[sl]), jnp.asarray(Y[sl]))
-        rec = {"epoch": ep, "loss": float(last)}
-        if eval_fn is not None:
-            rec.update(eval_fn(params))
-        history.append(rec)
-    return params, history
+              eval_fn: Optional[Callable] = None,
+              engine: str = "host",
+              per_example: Optional[bool] = None) -> Tuple[dict, List[Dict]]:
+    """Plain minibatch training used by Centralized / Local / DC — the d=1
+    degenerate case of the federated engine: one silo, each "round" is one
+    epoch, optimizer state carried across rounds, FedAvg over one silo is
+    the identity. engine="scan" compiles the whole run into one dispatch."""
+    res = run_federated(
+        loss_fn, params, [(np.asarray(X), np.asarray(Y))], opt=opt,
+        rounds=epochs, local_epochs=1, batch_size=batch_size, seed=seed,
+        eval_fn=eval_fn, engine=engine, per_example=per_example,
+        reset_opt_per_round=False)
+    history = [{"epoch": h["round"],
+                **{k: v for k, v in h.items() if k != "round"}}
+               for h in res.history]
+    return res.params, history
 
 
 def dc_setup(Xs_flat: Sequence[np.ndarray], *, m_tilde: int,

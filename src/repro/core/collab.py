@@ -51,6 +51,19 @@ def pad_ragged(mats: Sequence[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
     return out, mask
 
 
+def pad_ragged2d(mats: Sequence[np.ndarray]) -> np.ndarray:
+    """Stack matrices ragged in BOTH dims into a zero-padded
+    (B, n_max, m_max) float32 array (no masks: callers exploit that
+    zero-padding makes the products they need exact — see
+    gram.ops.apply_G_batched)."""
+    n_max = max(m.shape[0] for m in mats)
+    m_max = max(m.shape[1] for m in mats)
+    out = np.zeros((len(mats), n_max, m_max), np.float32)
+    for b, m in enumerate(mats):
+        out[b, : m.shape[0], : m.shape[1]] = m
+    return out
+
+
 def _fix_signs(U: np.ndarray, s: np.ndarray, V: np.ndarray):
     """Deterministic sign convention: make the max-|entry| of each V column
     positive, flipping the (U, V) pair jointly. SVD/eigh factorisations are
@@ -83,6 +96,11 @@ class HostBackend:
     def solve_G_many(self, anchors: Sequence[np.ndarray],
                      Z: np.ndarray) -> List[np.ndarray]:
         return [solve_G(A, Z) for A in anchors]
+
+    def apply_G_many(self, Xs: Sequence[np.ndarray],
+                     Gs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Per-user X̂_j = X̃_j G_j — serial float64 matmuls."""
+        return [np.asarray(x, np.float64) @ g for x, g in zip(Xs, Gs)]
 
 
 class DeviceBackend:
@@ -137,6 +155,22 @@ class DeviceBackend:
                 "cannot handle at ridge=0 — use collab.DeviceBackend("
                 "ridge=1e-3) as svd_backend, or svd_backend='host'")
         return [G[b, : a.shape[1]] for b, a in enumerate(anchors)]
+
+    def apply_G_many(self, Xs: Sequence[np.ndarray],
+                     Gs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Per-user X̂_j = X̃_j G_j for ALL users in ONE batched device
+        matmul: X̃ zero-padded on both axes, G zero-padded on rows — the
+        real blocks of the products are exact because padded columns of X̃
+        only ever multiply zero rows of G (padded sample rows are sliced
+        away)."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        Xp = pad_ragged2d(Xs)                             # (U, n_max, m̃_max)
+        Gp = pad_ragged2d(Gs)                             # (U, m̃_max, m̂)
+        out = np.asarray(gram_ops.apply_G_batched(jnp.asarray(Xp),
+                                                  jnp.asarray(Gp)))
+        return [out[u, : x.shape[0], : g.shape[1]]
+                for u, (x, g) in enumerate(zip(Xs, Gs))]
 
 
 _BACKENDS = {"host": HostBackend, "device": DeviceBackend, "tpu": DeviceBackend}
@@ -252,6 +286,14 @@ def solve_G_all(anchors: Sequence[np.ndarray], Z: np.ndarray,
     anchor widths and answers with ONE batched QR solve — zero per-user
     `lstsq` calls."""
     return get_backend(backend).solve_G_many(anchors, Z)
+
+
+def apply_G_all(Xs: Sequence[np.ndarray], Gs: Sequence[np.ndarray],
+                backend: str = "host") -> List[np.ndarray]:
+    """Step 12: collaboration representations X̂_j = X̃_j G_j for a flat list
+    of users. The device backend runs ONE padded batched matmul for all
+    users (zero per-user host matmuls); host is the serial float64 loop."""
+    return get_backend(backend).apply_G_many(Xs, Gs)
 
 
 def alignment_residual(anchor_j: np.ndarray, G: np.ndarray,

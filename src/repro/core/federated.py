@@ -1,19 +1,36 @@
 """Step 4 of FedDCL: federated learning between intra-group DC servers.
 
-Two realizations of the same aggregation schedule:
+ONE trainer serves every method (`run_federated`; Centralized / Local / DC
+reach it through `baselines.sgd_train`, the d=1 degenerate case), with two
+interchangeable engines mirroring the step-3 `CollabBackend` split
+(DESIGN.md §3, §4):
 
-1. **Host simulation** (`run_federated`) — faithful to the paper's §4: d
-   DC-server silos, each running E local epochs of minibatch training per
-   round, parameters averaged (sample-weighted FedAvg) each round. Supports
-   FedAvg / FedProx (proximal term) / FedSGD (one aggregated gradient step
-   per round). Used by the tabular benchmarks.
+  engine="host" — the paper-faithful reference: a NumPy-orchestrated Python
+      loop that dispatches one tiny jitted SGD step per minibatch per epoch
+      per silo per round (thousands of device launches for a 20-round run).
+  engine="scan" — the compiled form: the WHOLE FL phase is one jitted
+      program. Silo datasets are zero-padded to a (d, n_slots, m) stack with
+      per-sample masks, minibatch order comes from `jax.random.permutation`
+      folded from the seed, local epochs and minibatches are inner
+      `lax.scan`s with the per-silo step vmapped over the leading silo dim,
+      and rounds are an outer `lax.scan` whose boundary is the weighted
+      `fedavg_sync`. A 20-round × 4-epoch run is ONE dispatch.
 
-2. **Mesh collectives** (`silo_vmap_step`, `fedavg_sync`) — the production
-   form on the TPU mesh: parameters carry a leading silo dim sharded over
-   the silo mesh axis ("pod" on multi-pod, "data" on single-pod); local
-   steps are vmapped over that dim (provably zero cross-silo collectives)
-   and the round boundary is one mean-reduce (GSPMD lowers it to an
-   all-reduce over the silo axis only). Used by launch/train.py.
+Both engines consume the same padded layout (`pad_silo_data`) and the same
+batch schedule (`round_perms`), so with the same seed they agree to float
+tolerance on parameters and loss trajectories (tests/test_fed_engine.py).
+FedAvg / FedProx / FedSGD all route through the same code path.
+
+Loss reporting: `history[rnd]["loss"]` is the sample-weighted mean over
+silos of each silo's final-local-epoch masked mean loss (the scan engine
+carries it through the scan; the host engine accumulates the same sums).
+
+The mesh-collective primitives (`silo_vmap_step`, `fedavg_sync`,
+`scan_local_steps`) are the production form on the TPU mesh: parameters
+carry a leading silo dim sharded over the silo mesh axis, local steps are
+vmapped over that dim (provably zero cross-silo collectives) and the round
+boundary is one mean-reduce. launch/steps.py builds its federated round on
+top of them.
 """
 from __future__ import annotations
 
@@ -23,12 +40,160 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.optim import Optimizer, apply_updates
 
 
 # ==========================================================================
-# 1. Host-level silo simulation (paper-faithful)
+# 1. Shared engine substrate: padded silo layout + batch schedule + step
+# ==========================================================================
+
+@dataclass(frozen=True)
+class PaddedSilos:
+    """Zero-padded device layout shared by both engines.
+
+    X (d, n_slots, m) float32 and Y (d, n_slots[, k]) are the silo datasets
+    padded on the sample axis; w (d, n_slots) float32 holds 1.0 on REAL
+    samples and 0.0 on padding; sizes (d,) are the real sample counts.
+    n_slots = num_batches * batch_size ≥ max_i n_i, so every minibatch has a
+    static shape and an epoch is exactly one permutation of the slot axis.
+    """
+    X: np.ndarray
+    Y: np.ndarray
+    w: np.ndarray
+    sizes: np.ndarray
+    n_slots: int
+    batch_size: int
+    num_batches: int
+
+    @property
+    def num_silos(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def has_padding(self) -> bool:
+        return bool(np.any(self.sizes < self.n_slots))
+
+
+def pad_silo_data(silo_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                  batch_size: Optional[int] = None,
+                  fill: float = 0.0) -> PaddedSilos:
+    """Stack ragged per-silo (X_i, Y_i) into the padded engine layout.
+
+    batch_size=None means full-batch (FedSGD): one batch of n_max slots.
+    `fill` sets the value written into padded X rows — 0.0 in production;
+    the padding-leak property test passes garbage to prove masks win.
+    """
+    sizes = np.array([np.asarray(x).shape[0] for x, _ in silo_data], np.float32)
+    n_max = int(sizes.max())
+    if batch_size is None:
+        bs, nb = n_max, 1
+    else:
+        bs = int(batch_size)
+        nb = -(-n_max // bs)
+    n_slots = bs * nb
+    d = len(silo_data)
+    x0, y0 = np.asarray(silo_data[0][0]), np.asarray(silo_data[0][1])
+    X = np.full((d, n_slots) + x0.shape[1:], fill, np.float32)
+    Y = np.zeros((d, n_slots) + y0.shape[1:], y0.dtype)
+    w = np.zeros((d, n_slots), np.float32)
+    for i, (xi, yi) in enumerate(silo_data):
+        n = np.asarray(xi).shape[0]
+        X[i, :n] = np.asarray(xi, np.float32)
+        Y[i, :n] = np.asarray(yi)
+        w[i, :n] = 1.0
+    return PaddedSilos(X=X, Y=Y, w=w, sizes=sizes, n_slots=n_slots,
+                       batch_size=bs, num_batches=nb)
+
+
+def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int):
+    """Minibatch schedule for one round: a (d, epochs, n_slots) permutation
+    stack derived purely from (seed, round, silo, epoch) via fold_in — the
+    same indices whether `rnd` is a concrete int (host loop) or a traced
+    scan counter (scan engine)."""
+    kr = jax.random.fold_in(key, rnd)
+
+    def silo(i):
+        ki = jax.random.fold_in(kr, i)
+        return jax.vmap(
+            lambda e: jax.random.permutation(jax.random.fold_in(ki, e),
+                                             n_slots))(jnp.arange(epochs))
+
+    return jax.vmap(silo)(jnp.arange(num_silos))
+
+
+def _detect_per_example(loss_fn, params, padded: PaddedSilos) -> bool:
+    """A loss returning shape (batch,) is per-example (maskable); shape ()
+    is a black-box batch mean (legacy; valid only without padding)."""
+    bs = padded.batch_size
+    x_s = jax.ShapeDtypeStruct((bs,) + padded.X.shape[2:], padded.X.dtype)
+    y_s = jax.ShapeDtypeStruct((bs,) + padded.Y.shape[2:], padded.Y.dtype)
+    out = jax.eval_shape(loss_fn, params, x_s, y_s)
+    if out.shape == ():
+        return False
+    if out.shape == (bs,):
+        return True
+    raise ValueError(
+        f"loss_fn must return a scalar batch mean or a (batch,)-shaped "
+        f"per-example vector; got shape {out.shape}")
+
+
+def _make_batch_loss(loss_fn, per_example: bool, fedprox_mu: float):
+    """Masked batch objective shared by every aggregator and engine.
+
+    Per-example losses are weighted by the sample mask (padded slots
+    contribute exactly zero to value and gradient); scalar losses are used
+    verbatim (the caller guarantees no padding). FedProx adds the proximal
+    pull toward the round-start global params."""
+    def batch_loss(p, x, y, w, ref):
+        if per_example:
+            l = loss_fn(p, x, y)
+            loss = jnp.sum(w * l) / jnp.maximum(jnp.sum(w), 1.0)
+        else:
+            loss = loss_fn(p, x, y)
+        if fedprox_mu:
+            loss = loss + fedprox_regularizer(p, ref, fedprox_mu)
+        return loss
+
+    return batch_loss
+
+
+def _make_sgd_step(batch_loss, opt: Optimizer, masked: bool = False):
+    """masked=True additionally suppresses the optimizer update for batches
+    with ZERO real samples: without the guard an all-padding batch would
+    still advance the step counter, decay momentum, and coast parameters on
+    stale Adam state — so small ragged silos would take extra effective
+    steps. With it, all-padding batches are exact no-ops and a silo's
+    training is the sequence of its real-sample batches only."""
+    def step(p, opt_state, x, y, w, ref):
+        loss, grads = jax.value_and_grad(batch_loss)(p, x, y, w, ref)
+        updates, new_state = opt.update(grads, opt_state, p)
+        new_p = apply_updates(p, updates)
+        if masked:
+            has_real = jnp.sum(w) > 0
+            new_p = jax.tree.map(
+                lambda a, b: jnp.where(has_real, a, b), new_p, p)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.where(has_real, a, b), new_state, opt_state)
+        return new_p, new_state, loss
+
+    return step
+
+
+def _weighted_silo_mean(stacked: Any, wn: jnp.ndarray) -> Any:
+    """Sample-weighted mean over the leading silo dim (wn sums to 1)."""
+    return jax.tree.map(
+        lambda a: jnp.tensordot(wn, a.astype(jnp.float32),
+                                axes=(0, 0)).astype(a.dtype), stacked)
+
+
+def _stack_trees(trees: Sequence[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ==========================================================================
+# 2. The unified federated engine
 # ==========================================================================
 
 @dataclass
@@ -59,67 +224,240 @@ def run_federated(
     fedprox_mu: float = 0.0,
     seed: int = 0,
     eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+    engine: str = "host",
+    per_example: Optional[bool] = None,
+    reset_opt_per_round: bool = True,
+    pad_fill: float = 0.0,
 ) -> FLResult:
-    """Generic federated loop over host-resident silo datasets."""
-    rng = np.random.default_rng(seed)
-    global_params = init_params
+    """Federated training over host-resident silo datasets — the ONE trainer
+    behind FedAvg / FedProx / FedSGD / FedDCL and (via baselines.sgd_train)
+    Centralized / Local / DC.
 
-    if aggregator == "fedprox":
-        def local_loss(p, x, y, ref):
-            prox = sum(
-                jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
-                for a, b in zip(jax.tree_util.tree_leaves(p),
-                                jax.tree_util.tree_leaves(ref)))
-            return loss_fn(p, x, y) + 0.5 * fedprox_mu * prox
-    else:
-        def local_loss(p, x, y, ref):
-            return loss_fn(p, x, y)
+    loss_fn takes (params, x, y) and returns either a (batch,) per-example
+    loss vector (preferred: ragged silos are zero-padded and masked) or a
+    scalar batch mean (legacy; only valid when no padding is needed, i.e.
+    every silo has the same size divisible by batch_size). `per_example` is
+    auto-detected from the output shape when None.
 
-    @jax.jit
-    def sgd_step(p, opt_state, x, y, ref):
-        loss, grads = jax.value_and_grad(local_loss)(p, x, y, ref)
-        updates, opt_state = opt.update(grads, opt_state, p)
-        return apply_updates(p, updates), opt_state, loss
+    engine="host" is the paper-faithful per-batch-dispatch loop;
+    engine="scan" compiles the whole schedule into one lax.scan program.
+    Both use the same jax.random batch schedule and agree to float
+    tolerance for the same seed.
 
-    @jax.jit
-    def grad_only(p, x, y):
-        return jax.grad(loss_fn)(p, x, y)
+    reset_opt_per_round=False carries silo optimizer state across rounds
+    (used by sgd_train, where rounds are plain epochs).
+    """
+    if aggregator not in ("fedavg", "fedprox", "fedsgd"):
+        raise ValueError(f"unknown aggregator {aggregator!r}")
+    if engine not in ("host", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; choose 'host' or 'scan'")
+    padded = pad_silo_data(
+        silo_data, None if aggregator == "fedsgd" else batch_size,
+        fill=pad_fill)
+    if per_example is None:
+        per_example = _detect_per_example(loss_fn, init_params, padded)
+    if not per_example and padded.has_padding:
+        raise ValueError(
+            f"silo sizes {padded.sizes.astype(int).tolist()} need padding to "
+            f"{padded.n_slots} slots, which a scalar (batch-mean) loss cannot "
+            "mask — pass a per-example loss (returning a (batch,) vector, "
+            "e.g. models.mlp.mlp_per_example_loss) or equal-size silos "
+            "divisible by batch_size")
+    mu = fedprox_mu if aggregator == "fedprox" else 0.0
+    batch_loss = _make_batch_loss(loss_fn, per_example, mu)
+    runner = _run_host if engine == "host" else _run_scan
+    return runner(batch_loss, init_params, padded, opt=opt, rounds=rounds,
+                  local_epochs=local_epochs, aggregator=aggregator, seed=seed,
+                  eval_fn=eval_fn, per_example=per_example,
+                  reset_opt=reset_opt_per_round)
 
+
+# --------------------------------------------------------------------------
+# 2a. engine="host": NumPy-orchestrated reference (one dispatch per batch)
+# --------------------------------------------------------------------------
+
+def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
+              local_epochs, aggregator, seed, eval_fn, per_example,
+              reset_opt) -> FLResult:
+    d, nb, bs = padded.num_silos, padded.num_batches, padded.batch_size
+    key = jax.random.PRNGKey(seed)
+    step = jax.jit(_make_sgd_step(batch_loss, opt, masked=padded.has_padding))
+    grad_fn = jax.jit(jax.value_and_grad(batch_loss))
+    X, Y, w = padded.X, padded.Y, padded.w
+    sizes = padded.sizes
+    wn = jnp.asarray(sizes / sizes.sum())
+
+    gp = init_params
+    fedsgd_state = opt.init(gp) if aggregator == "fedsgd" else None
+    opt_states: List[Any] = [opt.init(gp) for _ in range(d)] if not reset_opt else []
     history: List[Dict[str, float]] = []
-    sizes = [x.shape[0] for x, _ in silo_data]
-    fedsgd_state = opt.init(global_params) if aggregator == "fedsgd" else None
     for rnd in range(rounds):
         if aggregator == "fedsgd":
-            grads = [grad_only(global_params, jnp.asarray(x), jnp.asarray(y))
-                     for x, y in silo_data]
-            g = fedavg_average(grads, sizes)
-            updates, fedsgd_state = opt.update(g, fedsgd_state, global_params)
-            global_params = apply_updates(global_params, updates)
+            losses, grads = [], []
+            for i in range(d):
+                li, gi = grad_fn(gp, jnp.asarray(X[i]), jnp.asarray(Y[i]),
+                                 jnp.asarray(w[i]), gp)
+                losses.append(li)
+                grads.append(gi)
+            g = _weighted_silo_mean(_stack_trees(grads), wn)
+            updates, fedsgd_state = opt.update(g, fedsgd_state, gp)
+            gp = apply_updates(gp, updates)
+            round_loss = float(jnp.sum(wn * jnp.stack(losses)))
         else:
+            perms = np.asarray(
+                round_perms(key, rnd, d, local_epochs, padded.n_slots))
             locals_: List[Any] = []
-            last_loss = 0.0
-            for (x, y) in silo_data:
-                p = global_params
-                opt_state = opt.init(p)
-                n = x.shape[0]
-                for _ in range(local_epochs):
-                    perm = rng.permutation(n)
-                    for s in range(0, n, batch_size):
-                        sl = perm[s : s + batch_size]
-                        p, opt_state, last_loss = sgd_step(
-                            p, opt_state, jnp.asarray(x[sl]), jnp.asarray(y[sl]),
-                            global_params)
+            final_losses = np.zeros(d)
+            for i in range(d):
+                p = gp
+                o = opt.init(p) if reset_opt else opt_states[i]
+                for e in range(local_epochs):
+                    idx = perms[i, e].reshape(nb, bs)
+                    # keep per-batch losses on device; only the final-epoch
+                    # weighted mean is pulled to host (ONE sync per silo per
+                    # round, like the pre-engine loop)
+                    ep_losses, ep_ws = [], []
+                    for b in range(nb):
+                        sl = idx[b]
+                        p, o, loss = step(p, o, jnp.asarray(X[i][sl]),
+                                          jnp.asarray(Y[i][sl]),
+                                          jnp.asarray(w[i][sl]), gp)
+                        if e == local_epochs - 1:
+                            ep_losses.append(loss)
+                            ep_ws.append(float(w[i][sl].sum())
+                                         if per_example else float(bs))
+                    if e == local_epochs - 1:
+                        num = sum(l * bw for l, bw in zip(ep_losses, ep_ws))
+                        final_losses[i] = float(num) / max(sum(ep_ws), 1.0)
                 locals_.append(p)
-            global_params = fedavg_average(locals_, sizes)
-        rec = {"round": rnd, "loss": float(last_loss) if aggregator != "fedsgd" else float("nan")}
+                if not reset_opt:
+                    opt_states[i] = o
+            gp = _weighted_silo_mean(_stack_trees(locals_), wn)
+            round_loss = float(np.sum(sizes / sizes.sum() * final_losses))
+        rec = {"round": rnd, "loss": round_loss}
         if eval_fn is not None:
-            rec.update(eval_fn(global_params))
+            rec.update(eval_fn(gp))
         history.append(rec)
-    return FLResult(params=global_params, history=history)
+    return FLResult(params=gp, history=history)
+
+
+# --------------------------------------------------------------------------
+# 2b. engine="scan": the whole FL phase as one compiled program
+# --------------------------------------------------------------------------
+
+def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
+                     local_epochs, aggregator="fedavg", seed=0,
+                     per_example=True, reset_opt=True,
+                     collect_params=False) -> Callable:
+    """Build the compiled whole-FL-phase program: a jitted
+    ``run(init_params) -> (final_params, per_round_outputs)`` where
+    per_round_outputs is the (rounds,) loss vector, or (losses, stacked
+    per-round params) when collect_params (the eval_fn path). Calling the
+    SAME runner twice reuses the compiled executable — what
+    benchmarks/fed_bench.py times as the warm FL phase."""
+    d, nb, bs = padded.num_silos, padded.num_batches, padded.batch_size
+    key = jax.random.PRNGKey(seed)
+    X, Y, w = jnp.asarray(padded.X), jnp.asarray(padded.Y), jnp.asarray(padded.w)
+    sizes = jnp.asarray(padded.sizes)
+    wn = sizes / jnp.sum(sizes)
+    collect = collect_params
+    step = _make_sgd_step(batch_loss, opt, masked=padded.has_padding)
+    vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, None))
+    gather = jax.vmap(lambda a, i: a[i])                 # (d, n_slots, …) × (d, B)
+
+    @jax.jit
+    def run(init_params):
+        if aggregator == "fedsgd":
+            def round_body(carry, rnd):
+                gp, fs = carry
+                losses, grads = jax.vmap(
+                    lambda x, y, wi: jax.value_and_grad(batch_loss)(gp, x, y, wi, gp)
+                )(X, Y, w)
+                g = _weighted_silo_mean(grads, wn)
+                updates, fs = opt.update(g, fs, gp)
+                gp = apply_updates(gp, updates)
+                rl = jnp.sum(wn * losses)
+                return (gp, fs), ((rl, gp) if collect else rl)
+
+            (gp, _), ys = lax.scan(round_body,
+                                   (init_params, opt.init(init_params)),
+                                   jnp.arange(rounds))
+            return gp, ys
+
+        def local_phase(gp, so, rnd):
+            """E epochs × nb batches of vmapped silo steps; returns the
+            trained silo params/opt state and per-silo final-epoch loss."""
+            perms = round_perms(key, rnd, d, local_epochs, padded.n_slots)
+            bidx = perms.reshape(d, local_epochs, nb, bs).transpose(1, 2, 0, 3)
+
+            def epoch_body(c, eb):                        # eb: (nb, d, bs)
+                def batch_body(c2, ib):                   # ib: (d, bs)
+                    sp2, so2 = c2
+                    xb, yb, wb = gather(X, ib), gather(Y, ib), gather(w, ib)
+                    sp2, so2, losses = vstep(sp2, so2, xb, yb, wb, gp)
+                    bw = jnp.sum(wb, axis=1) if per_example else jnp.full((d,), float(bs))
+                    return (sp2, so2), (losses * bw, bw)
+
+                c, (ls, ws) = lax.scan(batch_body, c, eb)
+                ep_loss = jnp.sum(ls, 0) / jnp.maximum(jnp.sum(ws, 0), 1.0)
+                return c, ep_loss
+
+            (sp, so), ep_losses = lax.scan(
+                epoch_body, (silo_replicate(gp, d), so), bidx)
+            return sp, so, ep_losses[-1]                  # (d,)
+
+        if reset_opt:
+            def round_body(gp, rnd):
+                so = jax.vmap(opt.init)(silo_replicate(gp, d))
+                sp, _, final_losses = local_phase(gp, so, rnd)
+                gp = _weighted_silo_mean(sp, wn)
+                rl = jnp.sum(wn * final_losses)
+                return gp, ((rl, gp) if collect else rl)
+
+            gp, ys = lax.scan(round_body, init_params, jnp.arange(rounds))
+        else:
+            def round_body(carry, rnd):
+                gp, so = carry
+                sp, so, final_losses = local_phase(gp, so, rnd)
+                gp = _weighted_silo_mean(sp, wn)
+                rl = jnp.sum(wn * final_losses)
+                return (gp, so), ((rl, gp) if collect else rl)
+
+            so0 = jax.vmap(opt.init)(silo_replicate(init_params, d))
+            (gp, _), ys = lax.scan(round_body, (init_params, so0),
+                                   jnp.arange(rounds))
+        return gp, ys
+
+    return run
+
+
+def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
+              local_epochs, aggregator, seed, eval_fn, per_example,
+              reset_opt) -> FLResult:
+    collect = eval_fn is not None
+    runner = make_scan_runner(batch_loss, padded, opt=opt, rounds=rounds,
+                              local_epochs=local_epochs, aggregator=aggregator,
+                              seed=seed, per_example=per_example,
+                              reset_opt=reset_opt, collect_params=collect)
+    gp, ys = runner(init_params)
+
+    if collect:
+        round_losses, round_params = ys
+        round_losses = np.asarray(round_losses)
+        history = []
+        for rnd in range(rounds):
+            rec = {"round": rnd, "loss": float(round_losses[rnd])}
+            rec.update(eval_fn(jax.tree.map(lambda a: a[rnd], round_params)))
+            history.append(rec)
+    else:
+        round_losses = np.asarray(ys)
+        history = [{"round": rnd, "loss": float(round_losses[rnd])}
+                   for rnd in range(rounds)]
+    return FLResult(params=gp, history=history)
 
 
 # ==========================================================================
-# 2. Mesh-level federated collectives (production / dry-run form)
+# 3. Mesh-level federated collectives (production / dry-run form)
 # ==========================================================================
 
 def silo_replicate(params: Any, num_silos: int) -> Any:
@@ -134,6 +472,21 @@ def silo_vmap_step(step_fn: Callable) -> Callable:
     collective over the silo mesh axis — verified by tests/test_federated.py.
     """
     return jax.vmap(step_fn, in_axes=0, out_axes=0)
+
+
+def scan_local_steps(local_step: Callable, silo_params: Any,
+                     silo_opt_state: Any, batches: Any):
+    """Run H silo-local steps as ONE lax.scan — the launch-tier form of the
+    scan engine's inner loop. `batches` is a pytree with leading dim H (then
+    the per-step silo batch layout); returns (params, opt_state, metrics)
+    with metrics stacked over H."""
+    def body(c, b):
+        sp, so = c
+        sp, so, m = local_step(sp, so, b)
+        return (sp, so), m
+
+    (sp, so), ms = lax.scan(body, (silo_params, silo_opt_state), batches)
+    return sp, so, ms
 
 
 def fedavg_sync(silo_params: Any, weights: Optional[jnp.ndarray] = None) -> Any:

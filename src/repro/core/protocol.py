@@ -76,6 +76,12 @@ class FedDCLSetup:
         f, G = self.mappings[i][j], self.Gs[i][j]
         return lambda X: f(np.asarray(X, np.float64)) @ G
 
+    def fed_silos(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Step 4 input: per-DC-server (X̂^(i), Y^(i)) silo pairs, ready for
+        core.federated.run_federated (either engine — the scan engine pads
+        and moves them device-resident in one shot)."""
+        return list(zip(self.collab_X, self.collab_Y))
+
 
 def run_protocol(
     Xs: Sequence[Sequence[np.ndarray]],
@@ -142,20 +148,23 @@ def run_protocol(
         comm.log("fl", f"dc({i})", "Z", target.Z)
 
     # ---- Step 3c + 12: per-user G, collaboration representations ----------
-    # All users of the protocol solved in ONE batched QR call on device.
+    # All users of the protocol solved in ONE batched QR call on device, and
+    # all per-user X̂ = X̃ G products computed in ONE padded batched matmul
+    # (collab.apply_G_all) instead of a per-user host loop.
     flat_A = [inter_A[i][j] for i in range(d) for j in range(len(Xs[i]))]
     flat_G = collab.solve_G_all(flat_A, target.Z, backend=svd_backend)
+    flat_X = [inter_X[i][j] for i in range(d) for j in range(len(Xs[i]))]
+    flat_XG = collab.apply_G_all(flat_X, flat_G, backend=svd_backend)
     Gs: List[List[np.ndarray]] = []
     collab_X: List[np.ndarray] = []
     collab_Y: List[np.ndarray] = []
     k = 0
     for i in range(d):
-        row_g = flat_G[k:k + len(Xs[i])]
-        k += len(Xs[i])
-        Gs.append(row_g)
-        collab_X.append(np.concatenate(
-            [inter_X[i][j] @ row_g[j] for j in range(len(Xs[i]))], axis=0))
+        c_i = len(Xs[i])
+        Gs.append(flat_G[k:k + c_i])
+        collab_X.append(np.concatenate(flat_XG[k:k + c_i], axis=0))
         collab_Y.append(np.concatenate(list(Ys[i]), axis=0))
+        k += c_i
 
     return FedDCLSetup(anchor=anchor, mappings=mappings, Gs=Gs,
                        collab_X=collab_X, collab_Y=collab_Y, comm=comm,

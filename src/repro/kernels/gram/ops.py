@@ -79,6 +79,23 @@ def gram_eigh_topk_batched(a, k: int, *, backend: str = "auto"):
 
 
 @jax.jit
+def apply_G_batched(x, g):
+    """Batched per-user collaboration representations X̂_j = X̃_j G_j for a
+    whole stack of users in ONE device matmul.
+
+    x: (U, n_max, m̃_max) intermediate representations, zero-padded on both
+       the sample axis (ragged n_j) and the column axis (ragged m̃_j)
+    g: (U, m̃_max, m̂) per-user G, zero-padded on the row axis
+
+    Padded columns of x only ever meet zero rows of g, so the real block of
+    the product is EXACT; padded sample rows produce garbage that callers
+    slice away. No masks needed.
+    """
+    return jnp.einsum("unm,umh->unh", x.astype(jnp.float32),
+                      g.astype(jnp.float32))
+
+
+@jax.jit
 def solve_G_batched(a, z, col_mask=None, ridge: float = 0.0):
     """Batched eq. (3): G_b = argmin ‖A_b G − Z_b‖_F for a whole stack of
     users in one jitted QR solve.

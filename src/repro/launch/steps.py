@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core.federated import fedavg_sync
+from repro.core.federated import fedavg_sync, scan_local_steps
 from repro.models import backbone as bb
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
 from repro.optim.schedules import cosine_with_warmup
@@ -72,6 +72,43 @@ def make_federated_local_step(cfg: ModelConfig, tc: TrainConfig, *,
             return local_step(p, o, b)
 
     return jax.vmap(local_step_silo), opt
+
+
+def make_federated_round_step(cfg: ModelConfig, tc: TrainConfig, *,
+                              use_pallas: bool = False) -> Tuple[Callable, Any]:
+    """One FULL FedDCL round as a single compiled program: H silo-local
+    vmapped steps run as one lax.scan (core.federated.scan_local_steps — the
+    same inner loop the tabular scan engine uses) followed by the
+    fedavg_sync boundary. One dispatch per round instead of H+1.
+
+    Inputs: silo_params/silo_opt_state with leading dim d; batches with
+    leading dims (H, d, local_batch, ...). Returns (params, opt_state,
+    metrics stacked over H).
+    """
+    phase, opt = make_federated_local_phase_step(cfg, tc,
+                                                 use_pallas=use_pallas)
+    sync = make_fedavg_sync_step(tc)
+
+    def round_step(silo_params, silo_opt_state, batches):
+        sp, so, ms = phase(silo_params, silo_opt_state, batches)
+        sp, so = sync(sp, so)
+        return sp, so, ms
+
+    return round_step, opt
+
+
+def make_federated_local_phase_step(cfg: ModelConfig, tc: TrainConfig, *,
+                                    use_pallas: bool = False) -> Tuple[Callable, Any]:
+    """H silo-local steps as one lax.scan WITHOUT the sync boundary — the
+    round step minus fedavg_sync. train.py uses it for the trailing steps of
+    an unfinished round (steps % local_steps)."""
+    local_step, opt = make_federated_local_step(cfg, tc, use_pallas=use_pallas)
+
+    def phase(silo_params, silo_opt_state, batches):
+        return scan_local_steps(local_step, silo_params, silo_opt_state,
+                                batches)
+
+    return phase, opt
 
 
 def make_fedavg_sync_step(tc: TrainConfig) -> Callable:

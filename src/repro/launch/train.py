@@ -57,33 +57,57 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
     prefix = (lambda k, b: synthetic_prefix(k, cfg, b)) if cfg.prefix_frontend else None
 
     if federated:
-        vstep, opt = steps_lib.make_federated_local_step(cfg, tc)
-        sync = steps_lib.make_fedavg_sync_step(tc)
-        vstep = jax.jit(vstep, donate_argnums=(0, 1))
-        sync = jax.jit(sync, donate_argnums=(0, 1))
+        # One FedDCL round (H vmapped silo-local steps + the fedavg_sync
+        # boundary) is ONE compiled dispatch — the launch-tier consumption
+        # of the core.federated scan engine (DESIGN.md §4).
+        round_step, opt = steps_lib.make_federated_round_step(cfg, tc)
+        round_step = jax.jit(round_step, donate_argnums=(0, 1))
         assert batch % silos == 0
         sp = silo_replicate(params, silos)
         so = jax.vmap(opt.init)(sp)
         t0 = time.time()
-        for step in range(steps):
-            nb = silo_batches(cfg.vocab_size, seq, batch // silos, silos, step,
-                              seed=seed, non_iid=non_iid)
-            b = {k: jnp.asarray(v) for k, v in nb.items()}
+
+        def stacked_batches(step0, h):
+            """Stack h consecutive per-silo batches with leading dim h."""
+            nbs = [silo_batches(cfg.vocab_size, seq, batch // silos, silos,
+                                step0 + i, seed=seed, non_iid=non_iid)
+                   for i in range(h)]
+            b = {k: jnp.asarray(np.stack([nb[k] for nb in nbs]))
+                 for k in nbs[0]}
             if prefix is not None:
-                pk = jax.random.fold_in(key, step)
-                b["prefix_embeds"] = jax.vmap(
-                    lambda k: prefix(k, batch // silos))(
-                        jax.random.split(pk, silos))
-            sp, so, metrics = vstep(sp, so, b)
-            if (step + 1) % local_steps == 0:
-                sp, so = sync(sp, so)
-            if step % log_every == 0 or step == steps - 1:
-                rec = {"step": step,
-                       "loss": float(jnp.mean(metrics["loss"])),
-                       "elapsed_s": time.time() - t0}
-                history.append(rec)
-                print(f"step {step:5d} loss {rec['loss']:.4f} "
-                      f"({rec['elapsed_s']:.1f}s)")
+                def step_prefix(k):
+                    return jax.vmap(lambda kk: prefix(kk, batch // silos))(
+                        jax.random.split(k, silos))
+                pks = jnp.stack([jax.random.fold_in(key, step0 + i)
+                                 for i in range(h)])
+                b["prefix_embeds"] = jax.vmap(step_prefix)(pks)
+            return b
+
+        def log_round(step0, metrics):
+            h = int(metrics["loss"].shape[0])
+            for i in range(h):
+                step = step0 + i
+                if step % log_every == 0 or step == steps - 1:
+                    rec = {"step": step,
+                           "loss": float(jnp.mean(metrics["loss"][i])),
+                           "elapsed_s": time.time() - t0}
+                    history.append(rec)
+                    print(f"step {step:5d} loss {rec['loss']:.4f} "
+                          f"({rec['elapsed_s']:.1f}s)")
+
+        for rnd in range(steps // local_steps):
+            step0 = rnd * local_steps
+            sp, so, metrics = round_step(sp, so,
+                                         stacked_batches(step0, local_steps))
+            log_round(step0, metrics)
+        rem = steps % local_steps
+        if rem:
+            # trailing steps of an unfinished round: local steps, no sync —
+            # same semantics as the old per-step loop
+            phase, _ = steps_lib.make_federated_local_phase_step(cfg, tc)
+            phase = jax.jit(phase, donate_argnums=(0, 1))
+            sp, so, metrics = phase(sp, so, stacked_batches(steps - rem, rem))
+            log_round(steps - rem, metrics)
         params = jax.tree.map(lambda a: a[0], sp)
     else:
         step_fn, opt = steps_lib.make_train_step(cfg, tc)

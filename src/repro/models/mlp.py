@@ -39,15 +39,21 @@ def mlp_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
     return h
 
 
-def mlp_loss(params: Params, x: jnp.ndarray, y: jnp.ndarray, task: str,
-             l2: float = 0.0) -> jnp.ndarray:
+def mlp_per_example_loss(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+                         task: str) -> jnp.ndarray:
+    """(n,) per-example losses — what the federated engine masks/weights for
+    zero-padded ragged silos (core/federated.py). mlp_loss is its mean."""
     pred = mlp_forward(params, x)
     if task == "regression":
-        loss = jnp.mean(jnp.square(pred - y))
-    else:
-        logz = jax.nn.logsumexp(pred, axis=-1)
-        gold = jnp.take_along_axis(pred, y.astype(jnp.int32)[:, None], axis=-1)[:, 0]
-        loss = jnp.mean(logz - gold)
+        return jnp.mean(jnp.square(pred - y), axis=-1)
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, y.astype(jnp.int32)[:, None], axis=-1)[:, 0]
+    return logz - gold
+
+
+def mlp_loss(params: Params, x: jnp.ndarray, y: jnp.ndarray, task: str,
+             l2: float = 0.0) -> jnp.ndarray:
+    loss = jnp.mean(mlp_per_example_loss(params, x, y, task))
     if l2:
         sq = sum(jnp.sum(jnp.square(lp["w"])) for lp in params["layers"])
         loss = loss + l2 * sq

@@ -123,6 +123,25 @@ def test_solve_G_all_device_matches_host():
 
 
 # --------------------------------------------------------------------------
+# apply_G_all: batched per-user X̂ = X̃ G (step 12)
+# --------------------------------------------------------------------------
+
+def test_apply_G_all_device_matches_host_ragged_both_axes():
+    """Users ragged in rows (n_j), G-input cols (m̃_j) AND G-output cols
+    (m̂_j): the device path's single padded matmul must slice back to each
+    user's exact host-product shape and values."""
+    rng = np.random.default_rng(4)
+    shapes = [(30, 6, 3), (17, 8, 5), (44, 4, 4)]       # (n_j, m̃_j, m̂_j)
+    Xs = [rng.standard_normal((n, mt)) for n, mt, _ in shapes]
+    Gs = [rng.standard_normal((mt, mh)) for _, mt, mh in shapes]
+    host = collab.apply_G_all(Xs, Gs, backend="host")
+    dev = collab.apply_G_all(Xs, Gs, backend="device")
+    for h, dv, (n, mt, mh) in zip(host, dev, shapes):
+        assert h.shape == dv.shape == (n, mh)
+        np.testing.assert_allclose(dv, h, atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
 # full protocol: host vs device
 # --------------------------------------------------------------------------
 

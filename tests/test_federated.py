@@ -99,8 +99,13 @@ MESH_SCRIPT = textwrap.dedent("""
     from repro.launch.specs import make_plan
     from repro.launch.roofline import iter_collectives
     cfg = REDUCED["llama3.2-1b"]
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    try:
+        # axis_types / AxisType only exist on jax >= 0.5; the pinned CI jax
+        # (0.4.37) takes the portable spelling below
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+    except (AttributeError, TypeError):
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
     shape = InputShape("t", seq_len=64, global_batch=8, kind="train")
     tc = TrainConfig(model=cfg, shape=shape, remat=False,
                      param_dtype="float32", compute_dtype="float32",

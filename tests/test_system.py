@@ -28,7 +28,9 @@ def test_feddcl_comparable_to_fedavg_better_than_local(battery):
     """Experiment-I relative ordering: FedDCL ≈ FedAvg ≪ Local (RMSE)."""
     cfg, Xs, Ys, (Xtr, Ytr), (Xte, Yte) = battery
     key = jax.random.PRNGKey(0)
-    loss = lambda p, x, y: mlp.mlp_loss(p, x, y, "regression")
+    # per-example loss: silo sizes (100/200) aren't batch multiples, so the
+    # engine zero-pads and masks (core/federated.py)
+    loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, "regression")
 
     # Local
     p = mlp.for_config(key, cfg, reduced=False)
@@ -49,7 +51,7 @@ def test_feddcl_comparable_to_fedavg_better_than_local(battery):
     setup = protocol.run_protocol(Xs, Ys, m_tilde=cfg.reduced_dim,
                                   anchor_r=1000, seed=0)
     p = mlp.for_config(key, cfg, reduced=True)
-    res = run_federated(loss, p, list(zip(setup.collab_X, setup.collab_Y)),
+    res = run_federated(loss, p, setup.fed_silos(),
                         opt=adamw(1e-3), rounds=12, local_epochs=3)
     tr = setup.user_transform(0, 0)
     rmse_feddcl = mlp.mlp_metric(res.params, jnp.asarray(np.asarray(tr(Xte))),
