@@ -23,7 +23,8 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
                     n_test: int = 1000, seed: int = 0, lr: float = 1e-3,
                     non_iid: bool = False, dirichlet_alpha: float = 0.5,
                     methods=None, track_rounds: bool = False,
-                    engine: str = "host", svd_backend: str = "host") -> Dict:
+                    engine: str = "host", svd_backend: str = "host",
+                    cache: bool = False) -> Dict:
     """Returns {"metrics": {method: test metric}, "curves": {...}, "task": str}.
     Paper setup: batch 32; Centralized/Local/DC train `epochs`; FedAvg/FedDCL
     run `rounds` rounds × `local_epochs` epochs (§4.1).
@@ -31,7 +32,10 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
     All five methods train through the ONE federated engine
     (core/federated.py): `engine` selects the per-batch-dispatch host loop
     or the fully compiled lax.scan program; `svd_backend` selects the step-3
-    collaboration backend for FedDCL (DESIGN.md §3)."""
+    collaboration backend for FedDCL (DESIGN.md §3). cache=True (scan engine
+    only) routes every method through the shared compiled-plan cache with
+    stable loss/optimizer identities, so grid drivers (experiments/sweep.py,
+    exp3_groups) reuse executables across configs instead of recompiling."""
     cfg = PAPER_MLPS[dataset]
     methods = methods or ["Centralized", "Local", "FedAvg", "DC", "FedDCL"]
     n_train = d * c * n_ij
@@ -45,6 +49,10 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
     task = cfg.task
     key = jax.random.PRNGKey(seed)
     loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, task)
+    opt = adamw(lr)
+    cache_kw = (dict(cache=True, loss_id=("mlp_per_example_loss", task),
+                     opt_id=("adamw", lr))
+                if cache and engine == "scan" else {})
     Xte_j, Yte_j = jnp.asarray(Xte), jnp.asarray(Yte)
 
     def metric(p, X=Xte_j):
@@ -59,9 +67,9 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
         if method == "Centralized":
             p = mlp.for_config(key, cfg, reduced=False)
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
-            p, hist = baselines.sgd_train(loss, p, Xtr, Ytr, opt=adamw(lr),
+            p, hist = baselines.sgd_train(loss, p, Xtr, Ytr, opt=opt,
                                           epochs=epochs, eval_fn=ev,
-                                          engine=engine)
+                                          engine=engine, **cache_kw)
             out[method] = metric(p)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
@@ -69,8 +77,9 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             p = mlp.for_config(key, cfg, reduced=False)
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
             p, hist = baselines.sgd_train(loss, p, Xs[0][0], Ys[0][0],
-                                          opt=adamw(lr), epochs=epochs,
-                                          eval_fn=ev, engine=engine)
+                                          opt=opt, epochs=epochs,
+                                          eval_fn=ev, engine=engine,
+                                          **cache_kw)
             out[method] = metric(p)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
@@ -78,9 +87,9 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             p = mlp.for_config(key, cfg, reduced=False)
             flat = [(Xs[i][j], Ys[i][j]) for i in range(d) for j in range(c)]
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
-            res = run_federated(loss, p, flat, opt=adamw(lr), rounds=rounds,
+            res = run_federated(loss, p, flat, opt=opt, rounds=rounds,
                                 local_epochs=local_epochs, eval_fn=ev,
-                                engine=engine)
+                                engine=engine, **cache_kw)
             out[method] = metric(res.params)
             if track_rounds:
                 curves[method] = [h["metric"] for h in res.history]
@@ -93,9 +102,9 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             Xte_dc = jnp.asarray(np.asarray(maps[0](Xte) @ Gs[0]))
             ev = (lambda pp: {"metric": metric(pp, Xte_dc)}) if track_rounds else None
             p, hist = baselines.sgd_train(loss, p, np.concatenate(collabX),
-                                          np.concatenate(flatY), opt=adamw(lr),
+                                          np.concatenate(flatY), opt=opt,
                                           epochs=epochs, eval_fn=ev,
-                                          engine=engine)
+                                          engine=engine, **cache_kw)
             out[method] = metric(p, Xte_dc)
             if track_rounds:
                 curves[method] = [h["metric"] for h in hist]
@@ -108,9 +117,9 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             Xte_f = jnp.asarray(np.asarray(tr(Xte)))
             ev = (lambda pp: {"metric": metric(pp, Xte_f)}) if track_rounds else None
             res = run_federated(loss, p, setup.fed_silos(),
-                                opt=adamw(lr), rounds=rounds,
+                                opt=opt, rounds=rounds,
                                 local_epochs=local_epochs, eval_fn=ev,
-                                engine=engine)
+                                engine=engine, **cache_kw)
             out[method] = metric(res.params, Xte_f)
             if track_rounds:
                 curves[method] = [h["metric"] for h in res.history]

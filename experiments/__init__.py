@@ -1,0 +1,3 @@
+"""Reproducible experiment drivers (committed, unlike the untracked
+prototypes they replace): config-grid sweeps through the public
+FedDCL.fit() API and the compiled-plan cache."""

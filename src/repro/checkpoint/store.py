@@ -36,19 +36,25 @@ def _fmt(p) -> str:
 
 
 def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
-    """Atomic save (tmp + rename)."""
+    """Atomic save (tmp + rename).
+
+    The tmp name carries the .npz suffix so numpy writes the very file
+    mkstemp owns — savez only appends ".npz" to names missing it, and the
+    old append-then-guess-rename dance raced concurrent savers on a
+    predictable sibling name. Writing through the mkstemp fd keeps the
+    whole tmp lifetime under names no other process can collide with.
+    """
     flat = _flatten(tree)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
-                               suffix=".tmp")
-    os.close(fd)
+                               suffix=".npz")
     try:
-        np.savez(tmp, __meta__=json.dumps(metadata or {}), **flat)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp, path)
     finally:
-        for t in (tmp, tmp + ".npz"):
-            if os.path.exists(t):
-                os.remove(t)
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load(path: str, template: Any) -> Any:

@@ -23,16 +23,20 @@ def sgd_train(loss_fn, params, X, Y, *, opt: Optimizer, epochs: int,
               batch_size: int = 32, seed: int = 0,
               eval_fn: Optional[Callable] = None,
               engine: str = "host",
-              per_example: Optional[bool] = None) -> Tuple[dict, List[Dict]]:
+              per_example: Optional[bool] = None,
+              cache=None, loss_id=None, opt_id=None) -> Tuple[dict, List[Dict]]:
     """Plain minibatch training used by Centralized / Local / DC — the d=1
     degenerate case of the federated engine: one silo, each "round" is one
     epoch, optimizer state carried across rounds, FedAvg over one silo is
-    the identity. engine="scan" compiles the whole run into one dispatch."""
+    the identity. engine="scan" compiles the whole run into one dispatch;
+    cache/loss_id/opt_id route it through the shared compiled-plan cache
+    (core/federated.py) exactly like the federated methods."""
     res = run_federated(
         loss_fn, params, [(np.asarray(X), np.asarray(Y))], opt=opt,
         rounds=epochs, local_epochs=1, batch_size=batch_size, seed=seed,
         eval_fn=eval_fn, engine=engine, per_example=per_example,
-        reset_opt_per_round=False)
+        reset_opt_per_round=False, cache=cache, loss_id=loss_id,
+        opt_id=opt_id)
     history = [{"epoch": h["round"],
                 **{k: v for k, v in h.items() if k != "round"}}
                for h in res.history]

@@ -21,6 +21,14 @@ batch schedule (`round_perms`), so with the same seed they agree to float
 tolerance on parameters and loss trajectories (tests/test_fed_engine.py).
 FedAvg / FedProx / FedSGD all route through the same code path.
 
+The scan engine's compiled unit is a PLAN (`make_fl_plan`): a jitted
+program taking ALL tenant data (padded stacks, weights, PRNG key) as
+arguments, so executables are reusable across tenants. `PlanCache` stores
+plans keyed on the full compile signature with silo/batch axes rounded up
+to shape buckets (`run_federated(cache=True)`, DESIGN.md §6) — the
+amortization layer that makes sweeps and many-tenant traffic pay the
+~1 s trace+compile once instead of per call.
+
 Loss reporting: `history[rnd]["loss"]` is the sample-weighted mean over
 silos of each silo's final-local-epoch masked mean loss (the scan engine
 carries it through the scan; the host engine accumulates the same sums).
@@ -55,9 +63,17 @@ class PaddedSilos:
 
     X (d, n_slots, m) float32 and Y (d, n_slots[, k]) are the silo datasets
     padded on the sample axis; w (d, n_slots) float32 holds 1.0 on REAL
-    samples and 0.0 on padding; sizes (d,) are the real sample counts.
+    samples and 0.0 on padding; sizes (d,) int64 are the real sample counts
+    (kept integral — float32 counts silently corrupt FedAvg weights above
+    2^24 samples; they are converted to float only at the normalization
+    sites, see _norm_weights).
     n_slots = num_batches * batch_size ≥ max_i n_i, so every minibatch has a
     static shape and an epoch is exactly one permutation of the slot axis.
+
+    The silo axis may carry trailing EMPTY silos (sizes 0, all-padding) and
+    the slot axis trailing all-padding batches — how the plan cache buckets
+    ragged tenant shapes onto shared executables (pad_silo_data's
+    min_silos / min_batches).
     """
     X: np.ndarray
     Y: np.ndarray
@@ -78,22 +94,31 @@ class PaddedSilos:
 
 def pad_silo_data(silo_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                   batch_size: Optional[int] = None,
-                  fill: float = 0.0) -> PaddedSilos:
+                  fill: float = 0.0,
+                  min_batches: int = 0,
+                  min_silos: int = 0) -> PaddedSilos:
     """Stack ragged per-silo (X_i, Y_i) into the padded engine layout.
 
     batch_size=None means full-batch (FedSGD): one batch of n_max slots.
     `fill` sets the value written into padded X rows — 0.0 in production;
     the padding-leak property test passes garbage to prove masks win.
+    min_batches / min_silos round the layout UP to a shape bucket (extra
+    all-padding batches / extra zero-size silos) so different tenants share
+    one compiled executable (the plan cache, DESIGN.md §6). Empty silos get
+    sample weight zero everywhere, so they are exact no-ops.
     """
-    sizes = np.array([np.asarray(x).shape[0] for x, _ in silo_data], np.float32)
+    sizes = np.array([np.asarray(x).shape[0] for x, _ in silo_data], np.int64)
     n_max = int(sizes.max())
     if batch_size is None:
-        bs, nb = n_max, 1
+        bs, nb = max(n_max, 1), 1
     else:
         bs = int(batch_size)
         nb = -(-n_max // bs)
+    nb = max(nb, int(min_batches), 1)
     n_slots = bs * nb
-    d = len(silo_data)
+    d = max(len(silo_data), int(min_silos))
+    if d > len(silo_data):
+        sizes = np.concatenate([sizes, np.zeros(d - len(silo_data), np.int64)])
     x0, y0 = np.asarray(silo_data[0][0]), np.asarray(silo_data[0][1])
     X = np.full((d, n_slots) + x0.shape[1:], fill, np.float32)
     Y = np.zeros((d, n_slots) + y0.shape[1:], y0.dtype)
@@ -105,6 +130,15 @@ def pad_silo_data(silo_data: Sequence[Tuple[np.ndarray, np.ndarray]],
         w[i, :n] = 1.0
     return PaddedSilos(X=X, Y=Y, w=w, sizes=sizes, n_slots=n_slots,
                        batch_size=bs, num_batches=nb)
+
+
+def _norm_weights(sizes: np.ndarray) -> np.ndarray:
+    """Per-silo FedAvg weights from integral sample counts: normalized on
+    host in float64 (exact for any realistic count) and only THEN cast to
+    float32 for the device — sizes themselves are never stored as float32,
+    which would corrupt counts above 2^24."""
+    s = np.asarray(sizes, np.float64)
+    return (s / s.sum()).astype(np.float32)
 
 
 def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int):
@@ -193,6 +227,104 @@ def _stack_trees(trees: Sequence[Any]) -> Any:
 
 
 # ==========================================================================
+# 1b. The compiled-plan cache: shape-bucketed executable reuse
+# ==========================================================================
+
+def bucket_pow2(n: int) -> int:
+    """Round n up to the next power of two (the default bucket policy):
+    ≤ 2× padding waste, log-many buckets over any tenant population."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _tree_signature(tree: Any) -> Tuple:
+    """Hashable (structure, leaf shapes/dtypes) fingerprint of a pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef),
+            tuple((tuple(np.shape(l)), str(jnp.asarray(l).dtype))
+                  for l in leaves))
+
+
+class PlanCache:
+    """LRU cache of compiled FL plans keyed on the full compile signature.
+
+    A plan (make_fl_plan) takes all tenant data as arguments, so two
+    run_federated calls whose padded layouts land in the same shape bucket
+    — (num_silos, num_batches, batch_size, feature/target shapes, params
+    signature) — and share the same static config (aggregator, rounds,
+    epochs, reset_opt, collect, per_example, fedprox_mu, loss/opt identity)
+    reuse ONE jitted callable and therefore ONE XLA executable. Bucketing
+    (bucket_silos / bucket_batches, default next-pow2) rounds the silo and
+    batch axes UP so a new tenant's ragged shapes hit an existing
+    executable instead of compiling a fresh one.
+
+    Counters: hits / misses / evictions; a miss builds (and on first call
+    compiles) a new plan, so `misses` == number of executables built
+    through this cache.
+    """
+
+    def __init__(self, max_plans: int = 64,
+                 bucket_silos: Callable[[int], int] = bucket_pow2,
+                 bucket_batches: Callable[[int], int] = bucket_pow2):
+        from collections import OrderedDict
+        self._plans: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self.max_plans = max_plans
+        self.bucket_silos = bucket_silos
+        self.bucket_batches = bucket_batches
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "plans": len(self._plans)}
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def lookup(self, key: Tuple, build: Callable[[], Callable],
+               pins: Tuple = ()) -> Tuple[Callable, bool]:
+        """Return (plan, was_hit). `pins` holds strong references (loss_fn,
+        opt) for entries keyed on object identity, so a cached id() can
+        never be recycled by the allocator while the entry lives."""
+        if key in self._plans:
+            self._plans.move_to_end(key)
+            self.hits += 1
+            return self._plans[key][0], True
+        plan = build()
+        self._plans[key] = (plan, pins)
+        self.misses += 1
+        while len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return plan, False
+
+
+_DEFAULT_PLAN_CACHE: Optional[PlanCache] = None
+
+
+def default_plan_cache() -> PlanCache:
+    """The process-wide plan cache used by ``run_federated(cache=True)``
+    and the FedDCL.fit() API."""
+    global _DEFAULT_PLAN_CACHE
+    if _DEFAULT_PLAN_CACHE is None:
+        _DEFAULT_PLAN_CACHE = PlanCache()
+    return _DEFAULT_PLAN_CACHE
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return default_plan_cache().stats()
+
+
+def clear_plan_cache() -> None:
+    if _DEFAULT_PLAN_CACHE is not None:
+        _DEFAULT_PLAN_CACHE.clear()
+
+
+# ==========================================================================
 # 2. The unified federated engine
 # ==========================================================================
 
@@ -200,6 +332,7 @@ def _stack_trees(trees: Sequence[Any]) -> Any:
 class FLResult:
     params: Any
     history: List[Dict[str, float]]
+    cache_stats: Optional[Dict[str, int]] = None   # set when a PlanCache ran
 
 
 def fedavg_average(params_list: Sequence[Any], weights: Sequence[float]) -> Any:
@@ -228,6 +361,9 @@ def run_federated(
     per_example: Optional[bool] = None,
     reset_opt_per_round: bool = True,
     pad_fill: float = 0.0,
+    cache: Any = None,
+    loss_id: Optional[Tuple] = None,
+    opt_id: Optional[Tuple] = None,
 ) -> FLResult:
     """Federated training over host-resident silo datasets — the ONE trainer
     behind FedAvg / FedProx / FedSGD / FedDCL and (via baselines.sgd_train)
@@ -246,14 +382,46 @@ def run_federated(
 
     reset_opt_per_round=False carries silo optimizer state across rounds
     (used by sgd_train, where rounds are plain epochs).
+
+    cache=True (or a PlanCache instance) routes the scan engine through the
+    shape-bucketed compiled-plan cache (DESIGN.md §6): the padded layout is
+    rounded UP to the cache's silo/batch buckets and the compiled
+    executable is shared with every other call whose compile signature
+    matches — a sweep's 2nd–Nth configs then cost milliseconds. Because
+    bucketing changes n_slots (and so the minibatch schedule), the bucketed
+    layout is the canonical layout of a cached run: two cached runs agree
+    bitwise, and they agree with the host engine on the SAME bucketed
+    layout to engine tolerance. loss_id / opt_id give the loss/optimizer a
+    stable cache identity (e.g. ("mlp_per_example_loss", task) /
+    ("adamw", lr)); when omitted, object identity is used, which only hits
+    when the caller reuses the exact same callables. cache_stats on the
+    result records {hit, hits, misses, evictions, plans}.
     """
     if aggregator not in ("fedavg", "fedprox", "fedsgd"):
         raise ValueError(f"unknown aggregator {aggregator!r}")
     if engine not in ("host", "scan"):
         raise ValueError(f"unknown engine {engine!r}; choose 'host' or 'scan'")
-    padded = pad_silo_data(
-        silo_data, None if aggregator == "fedsgd" else batch_size,
-        fill=pad_fill)
+    plan_cache: Optional[PlanCache] = None
+    if cache is not None and cache is not False:
+        if engine != "scan":
+            raise ValueError("cache=... requires engine='scan' — the plan "
+                             "cache stores compiled scan-engine executables")
+        plan_cache = cache if isinstance(cache, PlanCache) else default_plan_cache()
+    if plan_cache is not None:
+        n_max = max(np.asarray(x).shape[0] for x, _ in silo_data)
+        if aggregator == "fedsgd":
+            bs_eff: Optional[int] = plan_cache.bucket_batches(n_max)
+            min_nb = 1
+        else:
+            bs_eff = batch_size
+            min_nb = plan_cache.bucket_batches(-(-n_max // batch_size))
+        padded = pad_silo_data(silo_data, bs_eff, fill=pad_fill,
+                               min_batches=min_nb,
+                               min_silos=plan_cache.bucket_silos(len(silo_data)))
+    else:
+        padded = pad_silo_data(
+            silo_data, None if aggregator == "fedsgd" else batch_size,
+            fill=pad_fill)
     if per_example is None:
         per_example = _detect_per_example(loss_fn, init_params, padded)
     if not per_example and padded.has_padding:
@@ -265,6 +433,35 @@ def run_federated(
             "divisible by batch_size")
     mu = fedprox_mu if aggregator == "fedprox" else 0.0
     batch_loss = _make_batch_loss(loss_fn, per_example, mu)
+    if plan_cache is not None:
+        collect = eval_fn is not None
+        key = (
+            padded.num_silos, padded.num_batches, padded.batch_size,
+            tuple(padded.X.shape[2:]), str(padded.X.dtype),
+            tuple(padded.Y.shape[2:]), str(padded.Y.dtype),
+            _tree_signature(init_params),
+            aggregator, rounds, local_epochs, bool(reset_opt_per_round),
+            collect, bool(per_example), float(mu),
+            loss_id if loss_id is not None else ("id", id(loss_fn)),
+            opt_id if opt_id is not None else ("id", id(opt)),
+        )
+        plan, was_hit = plan_cache.lookup(
+            key,
+            lambda: make_fl_plan(
+                num_silos=padded.num_silos, num_batches=padded.num_batches,
+                batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
+                rounds=rounds, local_epochs=local_epochs,
+                aggregator=aggregator, per_example=per_example,
+                reset_opt=reset_opt_per_round, collect_params=collect,
+                masked=True),
+            pins=(loss_fn, opt))
+        res = _run_scan(batch_loss, init_params, padded, opt=opt,
+                        rounds=rounds, local_epochs=local_epochs,
+                        aggregator=aggregator, seed=seed, eval_fn=eval_fn,
+                        per_example=per_example, reset_opt=reset_opt_per_round,
+                        plan=plan)
+        res.cache_stats = {"hit": was_hit, **plan_cache.stats()}
+        return res
     runner = _run_host if engine == "host" else _run_scan
     return runner(batch_loss, init_params, padded, opt=opt, rounds=rounds,
                   local_epochs=local_epochs, aggregator=aggregator, seed=seed,
@@ -285,7 +482,7 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
     grad_fn = jax.jit(jax.value_and_grad(batch_loss))
     X, Y, w = padded.X, padded.Y, padded.w
     sizes = padded.sizes
-    wn = jnp.asarray(sizes / sizes.sum())
+    wn = jnp.asarray(_norm_weights(sizes))
 
     gp = init_params
     fedsgd_state = opt.init(gp) if aggregator == "fedsgd" else None
@@ -345,28 +542,32 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
 # 2b. engine="scan": the whole FL phase as one compiled program
 # --------------------------------------------------------------------------
 
-def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
-                     local_epochs, aggregator="fedavg", seed=0,
-                     per_example=True, reset_opt=True,
-                     collect_params=False) -> Callable:
-    """Build the compiled whole-FL-phase program: a jitted
-    ``run(init_params) -> (final_params, per_round_outputs)`` where
-    per_round_outputs is the (rounds,) loss vector, or (losses, stacked
-    per-round params) when collect_params (the eval_fn path). Calling the
-    SAME runner twice reuses the compiled executable — what
-    benchmarks/fed_bench.py times as the warm FL phase."""
-    d, nb, bs = padded.num_silos, padded.num_batches, padded.batch_size
-    key = jax.random.PRNGKey(seed)
-    X, Y, w = jnp.asarray(padded.X), jnp.asarray(padded.Y), jnp.asarray(padded.w)
-    sizes = jnp.asarray(padded.sizes)
-    wn = sizes / jnp.sum(sizes)
+def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
+                 opt: Optimizer, batch_loss, rounds: int, local_epochs: int,
+                 aggregator: str = "fedavg", per_example: bool = True,
+                 reset_opt: bool = True, collect_params: bool = False,
+                 masked: bool = True) -> Callable:
+    """Build a compiled whole-FL-phase PLAN: a jitted
+
+        ``plan(init_params, X, Y, w, wn, key) -> (final_params, ys)``
+
+    where X (d, n_slots, …), Y, w are the padded silo stack, wn (d,) the
+    normalized per-silo sample weights (``_norm_weights``), key the PRNG key
+    that seeds the batch schedule, and ys the (rounds,) loss vector — or
+    (losses, stacked per-round params) when collect_params (the eval_fn
+    path). Unlike a data-closure runner, ALL tenant data enters as
+    arguments, so one plan compiles ONE executable per input-shape set and
+    every tenant whose padded shapes land in the same bucket reuses it —
+    the unit the PlanCache stores."""
+    d, nb, bs = num_silos, num_batches, batch_size
+    n_slots = nb * bs
     collect = collect_params
-    step = _make_sgd_step(batch_loss, opt, masked=padded.has_padding)
+    step = _make_sgd_step(batch_loss, opt, masked=masked)
     vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, None))
     gather = jax.vmap(lambda a, i: a[i])                 # (d, n_slots, …) × (d, B)
 
     @jax.jit
-    def run(init_params):
+    def plan(init_params, X, Y, w, wn, key):
         if aggregator == "fedsgd":
             def round_body(carry, rnd):
                 gp, fs = carry
@@ -387,7 +588,7 @@ def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
         def local_phase(gp, so, rnd):
             """E epochs × nb batches of vmapped silo steps; returns the
             trained silo params/opt state and per-silo final-epoch loss."""
-            perms = round_perms(key, rnd, d, local_epochs, padded.n_slots)
+            perms = round_perms(key, rnd, d, local_epochs, n_slots)
             bidx = perms.reshape(d, local_epochs, nb, bs).transpose(1, 2, 0, 3)
 
             def epoch_body(c, eb):                        # eb: (nb, d, bs)
@@ -428,18 +629,46 @@ def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
                                    jnp.arange(rounds))
         return gp, ys
 
-    return run
+    return plan
+
+
+def _plan_args(padded: PaddedSilos, seed: int):
+    """Device arguments a plan consumes for one tenant's padded stack."""
+    return (jnp.asarray(padded.X), jnp.asarray(padded.Y),
+            jnp.asarray(padded.w), jnp.asarray(_norm_weights(padded.sizes)),
+            jax.random.PRNGKey(seed))
+
+
+def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
+                     local_epochs, aggregator="fedavg", seed=0,
+                     per_example=True, reset_opt=True,
+                     collect_params=False) -> Callable:
+    """Back-compat data-closure wrapper over make_fl_plan: a
+    ``run(init_params) -> (final_params, ys)`` with this tenant's padded
+    stack bound. Calling the SAME runner twice reuses the compiled
+    executable — what benchmarks/fed_bench.py times as the warm FL phase."""
+    plan = make_fl_plan(
+        num_silos=padded.num_silos, num_batches=padded.num_batches,
+        batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
+        rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
+        per_example=per_example, reset_opt=reset_opt,
+        collect_params=collect_params, masked=padded.has_padding)
+    args = _plan_args(padded, seed)
+    return lambda init_params: plan(init_params, *args)
 
 
 def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
               local_epochs, aggregator, seed, eval_fn, per_example,
-              reset_opt) -> FLResult:
+              reset_opt, plan=None) -> FLResult:
     collect = eval_fn is not None
-    runner = make_scan_runner(batch_loss, padded, opt=opt, rounds=rounds,
-                              local_epochs=local_epochs, aggregator=aggregator,
-                              seed=seed, per_example=per_example,
-                              reset_opt=reset_opt, collect_params=collect)
-    gp, ys = runner(init_params)
+    if plan is None:
+        plan = make_fl_plan(
+            num_silos=padded.num_silos, num_batches=padded.num_batches,
+            batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
+            rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
+            per_example=per_example, reset_opt=reset_opt,
+            collect_params=collect, masked=padded.has_padding)
+    gp, ys = plan(init_params, *_plan_args(padded, seed))
 
     if collect:
         round_losses, round_params = ys

@@ -55,7 +55,11 @@ def _latent_classification(rng, n: int, m: int, latent: int, classes: int, *,
                            noise: float, sep: float = 2.2):
     """Class-conditional latent Gaussians -> low-rank features."""
     y = rng.integers(0, classes, size=n)
-    centers = rng.standard_normal((classes, latent)) * sep / np.sqrt(latent) * np.sqrt(latent)
+    # scale of the raw draw is irrelevant: the next line projects centers
+    # onto the radius-`sep` sphere (a dead `* sep / sqrt(l) * sqrt(l)`
+    # factor used to sit here; removing it keeps the RNG draw sequence
+    # identical and perturbs centers only in the last ulp of the division)
+    centers = rng.standard_normal((classes, latent))
     centers = centers / np.linalg.norm(centers, axis=1, keepdims=True) * sep
     Z = centers[y] + rng.standard_normal((n, latent))
     W = rng.standard_normal((latent, m)) / np.sqrt(latent)

@@ -60,7 +60,12 @@ class BatchedServer:
             logits, self.state = self._decode(self.params, self.state,
                                               self.cur_tok, self.pos)
         self.pos = self.pos.at[slot].set(len(toks))
-        self._last_logits = logits
+        if len(toks) == 0:
+            # empty prompt: nothing to prefill (and no logits to sample
+            # from) — seed the slot with token 0 at pos 0 and let the next
+            # batched decode step produce the first output token
+            self.cur_tok = self.cur_tok.at[slot, 0].set(0)
+            return
         nxt = self._sample(logits[slot, 0])
         req.out.append(int(nxt))
         self.cur_tok = self.cur_tok.at[slot, 0].set(int(nxt))
@@ -84,10 +89,15 @@ class BatchedServer:
                     self._prefill_slot(s, req)
             if not any(self.active):
                 break
-            # one batched decode step for every live slot
+            # one batched decode step; only LIVE slots advance their
+            # position — an always-advancing pos silently marched idle
+            # slots past cache_len (clamped/dropped cache writes under
+            # jit) and kept released slots decoding stale tokens
+            live = jnp.asarray([0 if r is None else 1 for r in self.active],
+                               jnp.int32)
             logits, self.state = self._decode(self.params, self.state,
                                               self.cur_tok, self.pos)
-            self.pos = self.pos + 1
+            self.pos = self.pos + live
             steps += 1
             new_toks = self.cur_tok
             for s, req in enumerate(self.active):
@@ -98,7 +108,9 @@ class BatchedServer:
                 new_toks = new_toks.at[s, 0].set(nxt)
                 if len(req.out) >= req.max_new:
                     req.done = True
-                    self.active[s] = None      # release slot mid-flight
+                    self.active[s] = None      # release slot mid-flight...
+                    self.pos = self.pos.at[s].set(0)       # ...and reset it
+                    new_toks = new_toks.at[s, 0].set(0)
             self.cur_tok = new_toks
         return {r.rid: r.out for r in requests}
 

@@ -1,0 +1,213 @@
+"""Plan-cache tier (DESIGN.md §6): compiled executables shared across
+tenants.
+
+Warm hits must agree with cold runs, the counters must record exactly the
+executables built, distinct configs (aggregator / reset_opt / fedprox_mu)
+must never alias onto one plan, and a cached run must agree with the host
+engine on the SAME bucketed layout. Also covers the FedDCL.fit() facade
+and the persistent XLA compilation cache wiring.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federated
+from repro.core.federated import (PlanCache, bucket_pow2, pad_silo_data,
+                                  run_federated)
+from repro.models import mlp
+from repro.optim import adamw
+
+M = 6          # raw feature dim of the toy tenants
+
+
+def _silos(d, n, seed=0):
+    r = np.random.default_rng(seed)
+    wt = r.standard_normal((M, 1))
+    out = []
+    for i in range(d):
+        X = r.standard_normal((n + 3 * i, M))            # ragged on purpose
+        out.append((X, X @ wt + 0.01 * r.standard_normal((n + 3 * i, 1))))
+    return out
+
+
+def _params(seed=0):
+    return mlp.init_mlp_params(jax.random.PRNGKey(seed), M, (8,), 1)
+
+
+def _loss(p, x, y):
+    return mlp.mlp_per_example_loss(p, x, y, "regression")
+
+
+KW = dict(rounds=2, local_epochs=1, batch_size=8, engine="scan",
+          loss_id=("mlp_per_example_loss", "regression"),
+          opt_id=("adamw", 1e-2))
+
+
+def _run(silos, cache, **over):
+    kw = {**KW, **over}
+    return run_federated(_loss, _params(), silos, opt=adamw(1e-2),
+                         cache=cache, **kw)
+
+
+def _flat(result):
+    return np.concatenate(
+        [np.ravel(np.asarray(l)) for l in jax.tree.leaves(result.params)])
+
+
+# ---------------------------------------------------------------------------
+# correctness: warm == cold, cached scan == host on the bucketed layout
+# ---------------------------------------------------------------------------
+
+def test_warm_hit_agrees_with_cold_run():
+    cache = PlanCache()
+    first = _run(_silos(3, 20, seed=0), cache)
+    assert first.cache_stats["hit"] is False
+    tenant = _silos(3, 22, seed=1)           # new tenant, same shape bucket
+    warm = _run(tenant, cache)
+    assert warm.cache_stats["hit"] is True
+    cold = _run(tenant, PlanCache())         # fresh cache: full rebuild
+    assert cold.cache_stats["hit"] is False
+    np.testing.assert_allclose(_flat(warm), _flat(cold), rtol=1e-6, atol=1e-7)
+    assert warm.history[-1]["loss"] == pytest.approx(
+        cold.history[-1]["loss"], rel=1e-5)
+
+
+def test_cached_scan_matches_host_on_bucketed_layout():
+    silos = _silos(3, 20, seed=0)
+    res = _run(silos, PlanCache())
+    bs = KW["batch_size"]
+    n_max = max(x.shape[0] for x, _ in silos)
+    padded = pad_silo_data(silos, bs,
+                           min_batches=bucket_pow2(-(-n_max // bs)),
+                           min_silos=bucket_pow2(len(silos)))
+    batch_loss = federated._make_batch_loss(_loss, True, 0.0)
+    host = federated._run_host(
+        batch_loss, _params(), padded, opt=adamw(1e-2), rounds=KW["rounds"],
+        local_epochs=KW["local_epochs"], aggregator="fedavg", seed=0,
+        eval_fn=None, per_example=True, reset_opt=True)
+    np.testing.assert_allclose(_flat(res), _flat(host), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# counters, bucket sharing, aliasing, eviction
+# ---------------------------------------------------------------------------
+
+def test_counters_and_bucket_sharing():
+    cache = PlanCache()
+    r1 = _run(_silos(3, 20, seed=0), cache)      # d=3 -> silo bucket 4
+    r2 = _run(_silos(4, 18, seed=1), cache)      # d=4 -> same bucket, hits
+    assert cache.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                             "plans": 1}
+    assert r1.cache_stats["hit"] is False and r2.cache_stats["hit"] is True
+
+
+def test_distinct_configs_never_alias():
+    cache = PlanCache()
+    silos = _silos(3, 20, seed=0)
+    base = _run(silos, cache)
+    prox = _run(silos, cache, aggregator="fedprox", fedprox_mu=0.1)
+    carry = _run(silos, cache, reset_opt_per_round=False)
+    s = cache.stats()
+    assert s["misses"] == 3 and s["hits"] == 0 and s["plans"] == 3
+    again = _run(silos, cache)                   # base config now hits
+    assert again.cache_stats["hit"] is True
+    np.testing.assert_allclose(_flat(again), _flat(base), rtol=1e-6)
+    # the three configs genuinely train differently — aliasing would
+    # silently collapse them onto one executable
+    assert not np.allclose(_flat(base), _flat(prox))
+    assert not np.allclose(_flat(base), _flat(carry))
+
+
+def test_lru_eviction():
+    cache = PlanCache(max_plans=1)
+    _run(_silos(2, 10, seed=0), cache)           # bucket (2 silos, 2 batches)
+    _run(_silos(3, 20, seed=1), cache)           # bucket (4, 4) -> evicts
+    assert cache.stats()["evictions"] == 1 and len(cache) == 1
+    r = _run(_silos(2, 10, seed=0), cache)       # evicted -> rebuilds
+    assert r.cache_stats["hit"] is False
+
+
+def test_cache_requires_scan_engine():
+    with pytest.raises(ValueError):
+        _run(_silos(2, 10), PlanCache(), engine="host")
+
+
+# ---------------------------------------------------------------------------
+# sample counts stay integral (float32 counts corrupt above 2^24)
+# ---------------------------------------------------------------------------
+
+def test_sample_counts_stay_integral():
+    padded = pad_silo_data(_silos(3, 20), 8, min_silos=4)
+    assert np.issubdtype(padded.sizes.dtype, np.integer)
+    assert padded.sizes.tolist() == [20, 23, 26, 0]   # bucket silo: size 0
+    big = np.array([2 ** 24 + 1, 2 ** 24], np.int64)
+    # the hazard the integral dtype guards against:
+    assert np.float32(big[0]) == np.float32(big[1])
+    # float64 normalization keeps the order; the cast happens only after
+    w64 = np.asarray(big, np.float64)
+    w64 /= w64.sum()
+    assert w64[0] > w64[1]
+    w = federated._norm_weights(big)
+    assert w.dtype == np.float32
+    assert abs(float(w.sum()) - 1.0) < 1e-6
+    np.testing.assert_allclose(federated._norm_weights(np.array([1, 3])),
+                               [0.25, 0.75], rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# the FedDCL.fit() facade rides the same cache
+# ---------------------------------------------------------------------------
+
+def _groups(n_ij, seed):
+    r = np.random.default_rng(seed)
+    w = r.standard_normal((M, 1))
+    Xs = [[r.standard_normal((n_ij, M)) for _ in range(2)] for _ in range(2)]
+    Ys = [[x @ w + 0.01 * r.standard_normal((n_ij, 1)) for x in g]
+          for g in Xs]
+    return Xs, Ys
+
+
+def test_api_fit_reuses_executables_across_tenants():
+    from repro.api import FedDCL
+    from repro.core.federated import default_plan_cache
+
+    default_plan_cache().clear()
+    m1 = FedDCL(m_tilde=4, anchor_r=64, rounds=2, local_epochs=1, seed=0)
+    _, res1 = m1.fit(*_groups(20, 0))
+    assert res1.cache_stats["hit"] is False
+    # a fresh estimator on a new same-bucket tenant hits the shared cache
+    m2 = FedDCL(m_tilde=4, anchor_r=64, rounds=2, local_epochs=1, seed=1)
+    Xs2, Ys2 = _groups(24, 1)
+    setup2, res2 = m2.fit(Xs2, Ys2)
+    assert res2.cache_stats["hit"] is True
+    assert default_plan_cache().stats()["misses"] == 1
+    yhat = m2.predict(Xs2[0][0])
+    assert yhat.shape == (24, 1) and np.all(np.isfinite(yhat))
+    assert np.isfinite(m2.score(Xs2[0][0], Ys2[0][0]))
+    assert setup2.collab_X[0].shape[1] == 4
+
+
+# ---------------------------------------------------------------------------
+# persistent XLA compilation cache wiring
+# ---------------------------------------------------------------------------
+
+def test_persistent_compilation_cache_populates(tmp_path):
+    from repro import api
+
+    prev = api._COMPILE_CACHE_ENABLED
+    d = str(tmp_path / "xla")
+    try:
+        assert api.enable_persistent_compilation_cache(d) == d
+        assert api.enable_persistent_compilation_cache(d) == d   # idempotent
+        f = jax.jit(lambda x: jnp.tanh(x * 2.0) @ x.T)
+        f(jnp.arange(32.0).reshape(4, 8)).block_until_ready()
+        assert os.listdir(d), "compilation cache dir stayed empty"
+    finally:
+        api._COMPILE_CACHE_ENABLED = prev
+        try:
+            jax.config.update("jax_compilation_cache_dir", prev)
+        except Exception:
+            pass

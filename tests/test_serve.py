@@ -1,0 +1,65 @@
+"""Serve-path slot-table invariants (fast; tiny 1-layer config).
+
+Pin the slot-drift fixes: idle slots must not advance their cache
+position, a released slot must reset pos/cur_tok before the next tenant,
+and an empty prompt must serve instead of crashing prefill.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED
+from repro.launch.serve import BatchedServer, Request
+from repro.models import backbone as bb
+
+TINY = dataclasses.replace(REDUCED["llama3.2-1b"], num_layers=1, d_model=64,
+                           num_heads=2, num_kv_heads=2, head_dim=32,
+                           d_ff=128, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return bb.init_params(TINY, jax.random.PRNGKey(0), jnp.float32)
+
+
+def test_idle_slots_hold_position(tiny_params):
+    server = BatchedServer(TINY, tiny_params, slots=3, cache_len=32)
+    outs = server.serve([Request(rid=0, prompt=np.array([1, 2, 3]),
+                                 max_new=6)])
+    assert len(outs[0]) == 6
+    pos = np.asarray(server.pos)
+    # slots 1 and 2 never admitted a request: the always-advancing pos bug
+    # marched them 1 step per decode regardless
+    assert pos[1] == 0 and pos[2] == 0
+
+
+def test_released_slot_resets(tiny_params):
+    server = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    outs = server.serve([Request(rid=0, prompt=np.array([4, 5]), max_new=3)])
+    assert len(outs[0]) == 3
+    assert int(server.pos[0]) == 0             # released -> pos reset
+    assert int(server.cur_tok[0, 0]) == 0      # ...and no stale token decoded
+    assert server.active[0] is None
+
+
+def test_empty_prompt_serves(tiny_params):
+    server = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    outs = server.serve([Request(rid=0, prompt=np.array([], np.int32),
+                                 max_new=3),
+                         Request(rid=1, prompt=np.array([5, 6, 7]),
+                                 max_new=3)])
+    assert len(outs[0]) == 3 and len(outs[1]) == 3
+    assert all(0 <= t < TINY.vocab_size for t in outs[0])
+
+
+def test_slot_reuse_across_queue(tiny_params):
+    """More requests than slots: released slots serve the queue tail."""
+    server = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    reqs = [Request(rid=i, prompt=np.array([i + 1, i + 2]), max_new=4)
+            for i in range(5)]
+    outs = server.serve(reqs)
+    assert sorted(outs) == [0, 1, 2, 3, 4]
+    assert all(len(v) == 4 for v in outs.values())

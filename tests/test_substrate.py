@@ -84,6 +84,35 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         store.load(path, {"w": jnp.ones((3, 3))})
 
 
+def test_checkpoint_concurrent_saves_same_path(tmp_path):
+    """Concurrent save() calls to ONE path: each writer owns a unique
+    mkstemp .npz tmp (the old guess-the-savez-rename dance raced on a
+    predictable sibling name), so the surviving checkpoint is one writer's
+    intact tree and no tmp litter remains."""
+    import threading
+
+    path = str(tmp_path / "ck.npz")
+    trees = [{"w": jnp.full((64, 64), float(i))} for i in range(8)]
+    errs = []
+
+    def save(i):
+        try:
+            store.save(path, trees[i], {"i": i})
+        except Exception as e:       # pragma: no cover - the assert reports
+            errs.append(e)
+
+    threads = [threading.Thread(target=save, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    v = np.asarray(store.load(path, trees[0])["w"])
+    assert float(v.min()) == float(v.max())      # one writer won, intact
+    assert float(v[0, 0]) == store.load_metadata(path)["i"]
+    assert sorted(os.listdir(tmp_path)) == ["ck.npz"]   # no tmp litter
+
+
 # ---------------------------------------------------------------------------
 # data
 # ---------------------------------------------------------------------------
@@ -96,6 +125,39 @@ def test_datasets_match_paper_dims(name):
     if ds.task == "classification":
         assert set(np.unique(ds.Y)) <= set(range(cfg.out_dim))
     assert np.all(np.isfinite(ds.X))
+
+
+def test_dataset_fingerprints_pinned():
+    """RNG draw-sequence guard: removing tabular.py's dead
+    `* sep / sqrt(l) * sqrt(l)` factor consumed no RNG draws, so these
+    fingerprints (pinned after the removal) stay stable; any future edit
+    that reorders or adds draws shows up here, not in silently shifted
+    benchmark numbers."""
+    import zlib
+    pinned = {"battery_small": (1376729784, 4020745439),
+              "mnist": (2658481171, 2230909913)}
+    for name, fp in pinned.items():
+        ds = make_dataset(name, n=128, seed=7)
+        got = (zlib.crc32(np.ascontiguousarray(ds.X).tobytes()),
+               zlib.crc32(np.ascontiguousarray(ds.Y).tobytes()))
+        assert got == fp, (name, got)
+
+
+def test_classification_centers_on_sep_sphere():
+    """The line after the deleted dead factor projects class centers onto
+    the radius-`sep` sphere, which is why the factor was dead: replay the
+    rng sequence to recover the centers and check both the projection and
+    that the label draw order is unchanged."""
+    from repro.data.tabular import _latent_classification
+    sep = 2.2
+    rng = np.random.default_rng(0)
+    _, y = _latent_classification(rng, 200, 10, 4, 3, noise=0.1, sep=sep)
+    rng = np.random.default_rng(0)
+    np.testing.assert_array_equal(y, rng.integers(0, 3, size=200))
+    centers = rng.standard_normal((3, 4))
+    centers = centers / np.linalg.norm(centers, axis=1, keepdims=True) * sep
+    np.testing.assert_allclose(np.linalg.norm(centers, axis=1), sep,
+                               rtol=1e-12)
 
 
 def test_token_stream_deterministic_and_learnable():
