@@ -29,6 +29,15 @@ to shape buckets (`run_federated(cache=True)`, DESIGN.md §6) — the
 amortization layer that makes sweeps and many-tenant traffic pay the
 ~1 s trace+compile once instead of per call.
 
+Plans also run MULTI-DEVICE (`make_fl_plan(mesh=...)`, DESIGN.md §7): the
+rounds-scan is wrapped in one `shard_map` with the padded silo stack split
+over the mesh's silo axes (("pod", "data") jointly on multi-pod meshes)
+and params replicated; the local phase is collective-free per shard and
+the round boundary lowers to one weighted all-reduce per leaf per
+hierarchy level. With `eval_fn`, plans are `StreamedPlan` chunk steps
+that bound eval memory to eval_chunk × |params| regardless of rounds
+(no more (rounds, |params|) stack inside the scan).
+
 Loss reporting: `history[rnd]["loss"]` is the sample-weighted mean over
 silos of each silo's final-local-epoch masked mean loss (the scan engine
 carries it through the scan; the host engine accumulates the same sums).
@@ -49,8 +58,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.optim import Optimizer, apply_updates
+from repro.shardingx.policy import batch_spec
 
 
 # ==========================================================================
@@ -141,12 +153,16 @@ def _norm_weights(sizes: np.ndarray) -> np.ndarray:
     return (s / s.sum()).astype(np.float32)
 
 
-def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int):
+def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int,
+                silo_ids: Optional[jnp.ndarray] = None):
     """Minibatch schedule for one round: a (d, epochs, n_slots) permutation
     stack derived purely from (seed, round, silo, epoch) via fold_in — the
     same indices whether `rnd` is a concrete int (host loop) or a traced
-    scan counter (scan engine)."""
+    scan counter (scan engine). `silo_ids` overrides the silo indices folded
+    into the key: a mesh shard holding silos [4..7] of a sharded plan passes
+    its GLOBAL ids so its streams match the single-device engine exactly."""
     kr = jax.random.fold_in(key, rnd)
+    ids = jnp.arange(num_silos) if silo_ids is None else silo_ids
 
     def silo(i):
         ki = jax.random.fold_in(kr, i)
@@ -154,7 +170,7 @@ def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int):
             lambda e: jax.random.permutation(jax.random.fold_in(ki, e),
                                              n_slots))(jnp.arange(epochs))
 
-    return jax.vmap(silo)(jnp.arange(num_silos))
+    return jax.vmap(silo)(ids)
 
 
 def _detect_per_example(loss_fn, params, padded: PaddedSilos) -> bool:
@@ -224,6 +240,49 @@ def _weighted_silo_mean(stacked: Any, wn: jnp.ndarray) -> Any:
 
 def _stack_trees(trees: Sequence[Any]) -> Any:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ==========================================================================
+# 1a. Mesh plumbing for sharded plans (DESIGN.md §7)
+# ==========================================================================
+
+def default_silo_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the padded silo dim shards over. When the mesh has both
+    "pod" and "data" axes the silo dim spans them jointly and the round
+    boundary aggregates hierarchically (intra-pod reduce over "data" first,
+    cross-pod over "pod" second — the scarce-DCI comm structure of TFL,
+    arXiv:1912.11187). A "model" axis is never a silo axis: model-parallel
+    rows inside one silo group stay replicated w.r.t. the silo stack."""
+    names = tuple(mesh.axis_names)
+    both = tuple(a for a in ("pod", "data") if a in names)
+    return both if both else names[:1]
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def num_silo_shards(mesh, silo_axes: Optional[Sequence[str]] = None) -> int:
+    """How many ways a sharded plan splits the silo axis (the padded silo
+    count must be a multiple of this; run_federated pads it up)."""
+    axes = tuple(silo_axes) if silo_axes else default_silo_axes(mesh)
+    sizes = _mesh_axis_sizes(mesh)
+    missing = [a for a in axes if a not in sizes]
+    if missing:
+        raise ValueError(f"silo axes {missing} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def _psum_tree(tree: Any, axes: Sequence[str]) -> Any:
+    """Hierarchical all-reduce at the round boundary: innermost (intra-node)
+    axis first, outer (cross-node) axes after. For axes=("pod", "data") that
+    is one psum over "data" inside each pod, then one over "pod" across the
+    DCI — exactly one weighted all-reduce per leaf per level, and the ONLY
+    collectives a sharded plan contains."""
+    for ax in reversed(tuple(axes)):
+        tree = jax.tree.map(lambda a: lax.psum(a, ax), tree)
+    return tree
 
 
 # ==========================================================================
@@ -364,6 +423,9 @@ def run_federated(
     cache: Any = None,
     loss_id: Optional[Tuple] = None,
     opt_id: Optional[Tuple] = None,
+    mesh=None,
+    silo_axes: Optional[Sequence[str]] = None,
+    eval_chunk: int = 8,
 ) -> FLResult:
     """Federated training over host-resident silo datasets — the ONE trainer
     behind FedAvg / FedProx / FedSGD / FedDCL and (via baselines.sgd_train)
@@ -396,17 +458,43 @@ def run_federated(
     ("adamw", lr)); when omitted, object identity is used, which only hits
     when the caller reuses the exact same callables. cache_stats on the
     result records {hit, hits, misses, evictions, plans}.
+
+    mesh (scan engine only) runs the FL phase sharded: the padded silo
+    stack is placed over the mesh's silo axes (silo_axes, default
+    `default_silo_axes` — ("pod", "data") jointly when both exist) via
+    shard_map, with hierarchical round-boundary psums as the ONLY
+    collectives (DESIGN.md §7). The silo count is padded up to a multiple
+    of the silo-shard count with empty no-op silos, so results match the
+    unsharded engine to float tolerance. eval_chunk bounds the eval path's
+    memory: with eval_fn, per-round params stream to host eval_chunk
+    rounds per dispatch instead of materializing a (rounds, |params|)
+    stack on device.
     """
     if aggregator not in ("fedavg", "fedprox", "fedsgd"):
         raise ValueError(f"unknown aggregator {aggregator!r}")
     if engine not in ("host", "scan"):
         raise ValueError(f"unknown engine {engine!r}; choose 'host' or 'scan'")
+    if mesh is not None and engine != "scan":
+        raise ValueError("mesh=... requires engine='scan' — the host engine "
+                         "is a per-batch dispatch loop and cannot shard the "
+                         "silo axis")
     plan_cache: Optional[PlanCache] = None
     if cache is not None and cache is not False:
         if engine != "scan":
             raise ValueError("cache=... requires engine='scan' — the plan "
                              "cache stores compiled scan-engine executables")
         plan_cache = cache if isinstance(cache, PlanCache) else default_plan_cache()
+    axes: Optional[Tuple[str, ...]] = None
+    shards = 1
+    if mesh is not None:
+        axes = tuple(silo_axes) if silo_axes else default_silo_axes(mesh)
+        shards = num_silo_shards(mesh, axes)
+
+    def shard_multiple(d: int) -> int:
+        """Round a silo count up to the silo-shard count (extra silos are
+        empty → exact no-ops under the mask rules)."""
+        return -(-d // shards) * shards
+
     if plan_cache is not None:
         n_max = max(np.asarray(x).shape[0] for x, _ in silo_data)
         if aggregator == "fedsgd":
@@ -415,13 +503,14 @@ def run_federated(
         else:
             bs_eff = batch_size
             min_nb = plan_cache.bucket_batches(-(-n_max // batch_size))
-        padded = pad_silo_data(silo_data, bs_eff, fill=pad_fill,
-                               min_batches=min_nb,
-                               min_silos=plan_cache.bucket_silos(len(silo_data)))
+        padded = pad_silo_data(
+            silo_data, bs_eff, fill=pad_fill, min_batches=min_nb,
+            min_silos=shard_multiple(plan_cache.bucket_silos(len(silo_data))))
     else:
         padded = pad_silo_data(
             silo_data, None if aggregator == "fedsgd" else batch_size,
-            fill=pad_fill)
+            fill=pad_fill,
+            min_silos=shard_multiple(len(silo_data)) if shards > 1 else 0)
     if per_example is None:
         per_example = _detect_per_example(loss_fn, init_params, padded)
     if not per_example and padded.has_padding:
@@ -434,16 +523,26 @@ def run_federated(
     mu = fedprox_mu if aggregator == "fedprox" else 0.0
     batch_loss = _make_batch_loss(loss_fn, per_example, mu)
     if plan_cache is not None:
-        collect = eval_fn is not None
+        mode = "chunk" if eval_fn is not None else "none"
+        # mesh descriptor: a sharded and an unsharded plan must never alias,
+        # nor two plans on meshes of different shape/axis names/silo axes
+        mesh_sig = None if mesh is None else (
+            tuple(mesh.axis_names),
+            tuple(int(s) for s in mesh.devices.shape), axes)
         key = (
             padded.num_silos, padded.num_batches, padded.batch_size,
             tuple(padded.X.shape[2:]), str(padded.X.dtype),
             tuple(padded.Y.shape[2:]), str(padded.Y.dtype),
             _tree_signature(init_params),
-            aggregator, rounds, local_epochs, bool(reset_opt_per_round),
-            collect, bool(per_example), float(mu),
+            # chunk plans step nr rounds per dispatch with rounds never
+            # baked into the executable, so they are rounds-agnostic:
+            # rounds=50 and rounds=200 share one cached plan
+            aggregator, None if mode == "chunk" else rounds,
+            local_epochs, bool(reset_opt_per_round),
+            mode, bool(per_example), float(mu),
             loss_id if loss_id is not None else ("id", id(loss_fn)),
             opt_id if opt_id is not None else ("id", id(opt)),
+            mesh_sig,
         )
         plan, was_hit = plan_cache.lookup(
             key,
@@ -452,21 +551,27 @@ def run_federated(
                 batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
                 rounds=rounds, local_epochs=local_epochs,
                 aggregator=aggregator, per_example=per_example,
-                reset_opt=reset_opt_per_round, collect_params=collect,
-                masked=True),
+                reset_opt=reset_opt_per_round, collect=mode,
+                masked=True, mesh=mesh, silo_axes=axes),
             pins=(loss_fn, opt))
         res = _run_scan(batch_loss, init_params, padded, opt=opt,
                         rounds=rounds, local_epochs=local_epochs,
                         aggregator=aggregator, seed=seed, eval_fn=eval_fn,
                         per_example=per_example, reset_opt=reset_opt_per_round,
-                        plan=plan)
+                        plan=plan, eval_chunk=eval_chunk)
         res.cache_stats = {"hit": was_hit, **plan_cache.stats()}
         return res
-    runner = _run_host if engine == "host" else _run_scan
-    return runner(batch_loss, init_params, padded, opt=opt, rounds=rounds,
-                  local_epochs=local_epochs, aggregator=aggregator, seed=seed,
-                  eval_fn=eval_fn, per_example=per_example,
-                  reset_opt=reset_opt_per_round)
+    if engine == "host":
+        return _run_host(batch_loss, init_params, padded, opt=opt,
+                         rounds=rounds, local_epochs=local_epochs,
+                         aggregator=aggregator, seed=seed, eval_fn=eval_fn,
+                         per_example=per_example,
+                         reset_opt=reset_opt_per_round)
+    return _run_scan(batch_loss, init_params, padded, opt=opt, rounds=rounds,
+                     local_epochs=local_epochs, aggregator=aggregator,
+                     seed=seed, eval_fn=eval_fn, per_example=per_example,
+                     reset_opt=reset_opt_per_round, mesh=mesh,
+                     silo_axes=axes, eval_chunk=eval_chunk)
 
 
 # --------------------------------------------------------------------------
@@ -542,94 +647,279 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
 # 2b. engine="scan": the whole FL phase as one compiled program
 # --------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class StreamedPlan:
+    """Chunked bounded-memory form of a compiled FL plan (collect="chunk").
+
+    ``step(carry, X, Y, w, wn, key, rnd0, nr)`` advances ``nr`` rounds
+    (static) starting at round ``rnd0`` (traced) and returns
+    ``(carry, (losses, params_per_round))`` where the stacked params have
+    leading dim ``nr`` — the CHUNK size, never the total rounds. The eval
+    path's peak extra memory is chunk × |params| instead of the old
+    rounds × |params| stack, and because total rounds never enters the
+    compiled program, one chunk executable serves every round budget.
+    ``carry_init(init_params)`` builds the opaque cross-chunk training
+    state (a donation-safe private copy on accelerators — ``step`` donates
+    its carry so chunks recycle buffers); ``carry_params(carry)`` reads the
+    current global params out of it."""
+    step: Callable
+    carry_init: Callable
+    carry_params: Callable
+
+
+def _resolve_collect(collect, collect_params) -> str:
+    mode = collect if collect is not None else \
+        ("stack" if collect_params else "none")
+    if mode not in ("none", "stack", "chunk"):
+        raise ValueError(f"unknown collect mode {mode!r}; "
+                         "choose 'none', 'stack', or 'chunk'")
+    return mode
+
+
 def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
                  opt: Optimizer, batch_loss, rounds: int, local_epochs: int,
                  aggregator: str = "fedavg", per_example: bool = True,
                  reset_opt: bool = True, collect_params: bool = False,
-                 masked: bool = True) -> Callable:
+                 masked: bool = True, collect: Optional[str] = None,
+                 mesh=None, silo_axes: Optional[Sequence[str]] = None):
     """Build a compiled whole-FL-phase PLAN: a jitted
 
         ``plan(init_params, X, Y, w, wn, key) -> (final_params, ys)``
 
     where X (d, n_slots, …), Y, w are the padded silo stack, wn (d,) the
     normalized per-silo sample weights (``_norm_weights``), key the PRNG key
-    that seeds the batch schedule, and ys the (rounds,) loss vector — or
-    (losses, stacked per-round params) when collect_params (the eval_fn
-    path). Unlike a data-closure runner, ALL tenant data enters as
-    arguments, so one plan compiles ONE executable per input-shape set and
-    every tenant whose padded shapes land in the same bucket reuses it —
-    the unit the PlanCache stores."""
+    that seeds the batch schedule, and ys the (rounds,) loss vector. Unlike
+    a data-closure runner, ALL tenant data enters as arguments, so one plan
+    compiles ONE executable per input-shape set and every tenant whose
+    padded shapes land in the same bucket reuses it — the unit the
+    PlanCache stores.
+
+    collect (back-compat bool ``collect_params`` maps onto it):
+      "none"  — ys is the (rounds,) loss vector (default).
+      "stack" — ys is (losses, per-round params stacked (rounds, |params|)).
+                LEGACY: materializes the full stack on device; kept for the
+                streamed-vs-stacked regression tests only.
+      "chunk" — returns a StreamedPlan whose step scans a CHUNK of rounds
+                and emits only that chunk's params — the bounded-memory
+                eval path (_run_scan streams chunks to host and keeps only
+                scalar metrics).
+
+    mesh/silo_axes (DESIGN.md §7): with a mesh, the whole FL phase runs
+    under shard_map with the padded silo dim sharded over silo_axes
+    (default ``default_silo_axes``: ("pod", "data") jointly when both
+    exist), params/PRNG replicated, and the entire local phase
+    collective-free per shard — each shard trains its d/shards silos with
+    their GLOBAL silo ids folded into the batch schedule, so the results
+    match the single-device plan to float tolerance. The only collectives
+    are the round-boundary weighted psums of fedavg_sync (one per leaf per
+    silo-axis level, hierarchical: intra-pod first, cross-pod second).
+    num_silos must be divisible by the silo-shard count (run_federated pads
+    with empty no-op silos)."""
     d, nb, bs = num_silos, num_batches, batch_size
     n_slots = nb * bs
-    collect = collect_params
+    mode = _resolve_collect(collect, collect_params)
+    axes: Optional[Tuple[str, ...]] = None
+    if mesh is not None:
+        axes = tuple(silo_axes) if silo_axes else default_silo_axes(mesh)
+        shards = num_silo_shards(mesh, axes)
+        if d % shards:
+            raise ValueError(
+                f"num_silos={d} is not divisible by the {shards}-way silo "
+                f"mesh {axes}; pad the silo stack (pad_silo_data min_silos, "
+                "as run_federated does) so every shard holds d/shards silos")
     step = _make_sgd_step(batch_loss, opt, masked=masked)
     vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, None))
     gather = jax.vmap(lambda a, i: a[i])                 # (d, n_slots, …) × (d, B)
 
-    @jax.jit
-    def plan(init_params, X, Y, w, wn, key):
+    def make_schedule(key, rnds):
+        """Batch schedule for the given rounds, (r, d, E, n_slots) over ALL
+        d silos. Sharded plans compute this OUTSIDE the shard_map region and
+        pass it in sharded over the silo dim — each shard then scans its own
+        silos' GLOBAL streams. Two reasons: it keeps the shard-local program
+        free of jax.random entirely, and it works around a jax 0.4.x
+        miscompile where the sort inside jax.random.permutation, lowered
+        within a shard_map manual region and consumed by a lax.scan, is
+        rewritten with partition-id so every shard silently gets shard 0's
+        permutations (verified on CPU; tests/test_fed_sharded.py would catch
+        it as a ~1e-2 disagreement)."""
+        return jax.vmap(
+            lambda r: round_perms(key, r, d, local_epochs, n_slots))(rnds)
+
+    def reduce_tree(stacked: Any, wn) -> Any:
+        """fedavg_sync in plan form: the weighted mean over the GLOBAL silo
+        axis — a local f32 tensordot over this shard's silos plus (when
+        sharded) the hierarchical round-boundary psum; wn sums to 1 over
+        all d silos, so the psum of partial weighted sums IS the mean."""
+        part = jax.tree.map(
+            lambda a: jnp.tensordot(wn, a.astype(jnp.float32), axes=(0, 0)),
+            stacked)
+        if axes is not None:
+            part = _psum_tree(part, axes)
+        return jax.tree.map(lambda p, s: p.astype(s.dtype), part, stacked)
+
+    def reduce_sum(x):
+        return _psum_tree(x, axes) if axes is not None else x
+
+    def local_phase(gp, so, perms, X, Y, w):
+        """E epochs × nb batches of vmapped silo steps over this shard's
+        silos (perms: this shard's (dl, E, n_slots) schedule slice); returns
+        trained silo params/opt state and per-silo final-epoch loss.
+        Contains NO collective and NO PRNG: everything is vmapped over the
+        local silo dim with per-silo masks."""
+        dl = perms.shape[0]
+        bidx = perms.reshape(dl, local_epochs, nb, bs).transpose(1, 2, 0, 3)
+
+        def epoch_body(c, eb):                            # eb: (nb, dl, bs)
+            def batch_body(c2, ib):                       # ib: (dl, bs)
+                sp2, so2 = c2
+                xb, yb, wb = gather(X, ib), gather(Y, ib), gather(w, ib)
+                sp2, so2, losses = vstep(sp2, so2, xb, yb, wb, gp)
+                bw = jnp.sum(wb, axis=1) if per_example \
+                    else jnp.full((dl,), float(bs))
+                return (sp2, so2), (losses * bw, bw)
+
+            c, (ls, ws) = lax.scan(batch_body, c, eb)
+            ep_loss = jnp.sum(ls, 0) / jnp.maximum(jnp.sum(ws, 0), 1.0)
+            return c, ep_loss
+
+        (sp, so), ep_losses = lax.scan(
+            epoch_body, (silo_replicate(gp, dl), so), bidx)
+        return sp, so, ep_losses[-1]                      # (dl,)
+
+    def round_step(carry, perms, X, Y, w, wn):
+        """One full round on this shard's silo slice (perms: this round's
+        (dl, E, n_slots) schedule): local phase + boundary sync. Returns
+        (carry, round_loss, global_params)."""
         if aggregator == "fedsgd":
-            def round_body(carry, rnd):
-                gp, fs = carry
-                losses, grads = jax.vmap(
-                    lambda x, y, wi: jax.value_and_grad(batch_loss)(gp, x, y, wi, gp)
-                )(X, Y, w)
-                g = _weighted_silo_mean(grads, wn)
-                updates, fs = opt.update(g, fs, gp)
-                gp = apply_updates(gp, updates)
-                rl = jnp.sum(wn * losses)
-                return (gp, fs), ((rl, gp) if collect else rl)
-
-            (gp, _), ys = lax.scan(round_body,
-                                   (init_params, opt.init(init_params)),
-                                   jnp.arange(rounds))
-            return gp, ys
-
-        def local_phase(gp, so, rnd):
-            """E epochs × nb batches of vmapped silo steps; returns the
-            trained silo params/opt state and per-silo final-epoch loss."""
-            perms = round_perms(key, rnd, d, local_epochs, n_slots)
-            bidx = perms.reshape(d, local_epochs, nb, bs).transpose(1, 2, 0, 3)
-
-            def epoch_body(c, eb):                        # eb: (nb, d, bs)
-                def batch_body(c2, ib):                   # ib: (d, bs)
-                    sp2, so2 = c2
-                    xb, yb, wb = gather(X, ib), gather(Y, ib), gather(w, ib)
-                    sp2, so2, losses = vstep(sp2, so2, xb, yb, wb, gp)
-                    bw = jnp.sum(wb, axis=1) if per_example else jnp.full((d,), float(bs))
-                    return (sp2, so2), (losses * bw, bw)
-
-                c, (ls, ws) = lax.scan(batch_body, c, eb)
-                ep_loss = jnp.sum(ls, 0) / jnp.maximum(jnp.sum(ws, 0), 1.0)
-                return c, ep_loss
-
-            (sp, so), ep_losses = lax.scan(
-                epoch_body, (silo_replicate(gp, d), so), bidx)
-            return sp, so, ep_losses[-1]                  # (d,)
-
+            gp, fs = carry
+            losses, grads = jax.vmap(
+                lambda x, y, wi: jax.value_and_grad(batch_loss)(gp, x, y,
+                                                                wi, gp)
+            )(X, Y, w)
+            g = reduce_tree(grads, wn)
+            updates, fs = opt.update(g, fs, gp)
+            gp = apply_updates(gp, updates)
+            return (gp, fs), reduce_sum(jnp.sum(wn * losses)), gp
         if reset_opt:
-            def round_body(gp, rnd):
-                so = jax.vmap(opt.init)(silo_replicate(gp, d))
-                sp, _, final_losses = local_phase(gp, so, rnd)
-                gp = _weighted_silo_mean(sp, wn)
-                rl = jnp.sum(wn * final_losses)
-                return gp, ((rl, gp) if collect else rl)
+            gp = carry
+            so = jax.vmap(opt.init)(silo_replicate(gp, X.shape[0]))
+            sp, _, final_losses = local_phase(gp, so, perms, X, Y, w)
+            gp = reduce_tree(sp, wn)
+            return gp, reduce_sum(jnp.sum(wn * final_losses)), gp
+        gp, so = carry
+        sp, so, final_losses = local_phase(gp, so, perms, X, Y, w)
+        gp = reduce_tree(sp, wn)
+        return (gp, so), reduce_sum(jnp.sum(wn * final_losses)), gp
 
-            gp, ys = lax.scan(round_body, init_params, jnp.arange(rounds))
-        else:
-            def round_body(carry, rnd):
-                gp, so = carry
-                sp, so, final_losses = local_phase(gp, so, rnd)
-                gp = _weighted_silo_mean(sp, wn)
-                rl = jnp.sum(wn * final_losses)
-                return (gp, so), ((rl, gp) if collect else rl)
+    own_state = aggregator == "fedsgd" or not reset_opt
 
-            so0 = jax.vmap(opt.init)(silo_replicate(init_params, d))
-            (gp, _), ys = lax.scan(round_body, (init_params, so0),
-                                   jnp.arange(rounds))
-        return gp, ys
+    def carry_init_traced(gp, dl):
+        if aggregator == "fedsgd":
+            return (gp, opt.init(gp))
+        if reset_opt:
+            return gp
+        return (gp, jax.vmap(opt.init)(silo_replicate(gp, dl)))
 
-    return plan
+    def carry_params(carry):
+        return carry[0] if own_state else carry
+
+    def data_specs(X, Y, w):
+        """silo-axis sharding for the padded tenant stacks: leading dim over
+        the (possibly hierarchical) silo axes, everything else shard-local
+        (shardingx.policy.batch_spec, federated tuple form)."""
+        return (batch_spec(mesh, federated=True, silo_axis=axes, ndim=X.ndim),
+                batch_spec(mesh, federated=True, silo_axis=axes, ndim=Y.ndim),
+                batch_spec(mesh, federated=True, silo_axis=axes, ndim=w.ndim),
+                P(axes))
+
+    def carry_specs(carry):
+        rep = lambda t: jax.tree.map(lambda _: P(), t)
+        if aggregator == "fedsgd":
+            return (rep(carry[0]), rep(carry[1]))
+        if reset_opt:
+            return rep(carry)
+        silo = jax.tree.map(
+            lambda l: P(axes, *([None] * (l.ndim - 1))), carry[1])
+        return (rep(carry[0]), silo)
+
+    def round_body_of(key, emit, X, Y, w, wn):
+        """Scan body over `sched` xs: either this round's (dl, E, n_slots)
+        schedule slice (sharded — the PRNG ran outside the manual region,
+        see make_schedule), or the scalar round index (unsharded / fedsgd —
+        the schedule is derived in-scan exactly as before)."""
+        def round_body(c, x):
+            if aggregator == "fedsgd":
+                pr = None
+            elif x.ndim == 0:
+                pr = round_perms(key, x, d, local_epochs, n_slots)
+            else:
+                pr = x
+            c, rl, gp = round_step(c, pr, X, Y, w, wn)
+            return c, emit(rl, gp)
+        return round_body
+
+    def sched_for(key, rnds):
+        if axes is None or aggregator == "fedsgd":
+            return rnds, P()
+        return make_schedule(key, rnds), P(None, axes)
+
+    if mode in ("none", "stack"):
+        emit = (lambda rl, gp: (rl, gp)) if mode == "stack" \
+            else (lambda rl, gp: rl)
+
+        @jax.jit
+        def plan(init_params, X, Y, w, wn, key):
+            def whole(init_params, X, Y, w, wn, key, sched):
+                carry0 = carry_init_traced(init_params, X.shape[0])
+                c, ys = lax.scan(round_body_of(key, emit, X, Y, w, wn),
+                                 carry0, sched)
+                return carry_params(c), ys
+
+            sched, sspec = sched_for(key, jnp.arange(rounds))
+            if axes is None:
+                return whole(init_params, X, Y, w, wn, key, sched)
+            sx, sy, sw, swn = data_specs(X, Y, w)
+            return shard_map(whole, mesh,
+                             in_specs=(P(), sx, sy, sw, swn, P(), sspec),
+                             out_specs=P(), check_rep=False)(
+                init_params, X, Y, w, wn, key, sched)
+
+        return plan
+
+    # mode == "chunk": the bounded-memory streamed plan
+    def chunk_step(carry, X, Y, w, wn, key, rnd0, nr):
+        emit = lambda rl, gp: (rl, gp)
+
+        def whole(carry, X, Y, w, wn, key, sched):
+            return lax.scan(round_body_of(key, emit, X, Y, w, wn),
+                            carry, sched)
+
+        sched, sspec = sched_for(key, rnd0 + jnp.arange(nr))
+        if axes is None:
+            return whole(carry, X, Y, w, wn, key, sched)
+        sx, sy, sw, swn = data_specs(X, Y, w)
+        cs = carry_specs(carry)
+        return shard_map(whole, mesh,
+                         in_specs=(cs, sx, sy, sw, swn, P(), sspec),
+                         out_specs=(cs, P()), check_rep=False)(
+            carry, X, Y, w, wn, key, sched)
+
+    # CPU has no buffer donation; elsewhere chunks recycle carry buffers
+    donate = () if jax.default_backend() == "cpu" else (0,)
+    jitted_step = jax.jit(chunk_step, static_argnums=(7,),
+                          donate_argnums=donate)
+
+    def carry_init(init_params):
+        # private copy so donation can never invalidate the caller's params
+        gp = jax.tree.map(jnp.array, init_params)
+        if aggregator == "fedsgd":
+            return (gp, opt.init(gp))
+        if reset_opt:
+            return gp
+        return (gp, jax.vmap(opt.init)(silo_replicate(gp, d)))
+
+    return StreamedPlan(step=jitted_step, carry_init=carry_init,
+                        carry_params=carry_params)
 
 
 def _plan_args(padded: PaddedSilos, seed: int):
@@ -642,41 +932,79 @@ def _plan_args(padded: PaddedSilos, seed: int):
 def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
                      local_epochs, aggregator="fedavg", seed=0,
                      per_example=True, reset_opt=True,
-                     collect_params=False) -> Callable:
+                     collect_params=False, mesh=None,
+                     silo_axes=None) -> Callable:
     """Back-compat data-closure wrapper over make_fl_plan: a
     ``run(init_params) -> (final_params, ys)`` with this tenant's padded
     stack bound. Calling the SAME runner twice reuses the compiled
-    executable — what benchmarks/fed_bench.py times as the warm FL phase."""
+    executable — what benchmarks/fed_bench.py times as the warm FL phase.
+    With mesh, the plan runs sharded (the padded silo count must already be
+    a multiple of the silo-shard count)."""
     plan = make_fl_plan(
         num_silos=padded.num_silos, num_batches=padded.num_batches,
         batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
         rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
         per_example=per_example, reset_opt=reset_opt,
-        collect_params=collect_params, masked=padded.has_padding)
+        collect_params=collect_params, masked=padded.has_padding,
+        mesh=mesh, silo_axes=silo_axes)
     args = _plan_args(padded, seed)
     return lambda init_params: plan(init_params, *args)
 
 
 def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
               local_epochs, aggregator, seed, eval_fn, per_example,
-              reset_opt, plan=None) -> FLResult:
-    collect = eval_fn is not None
+              reset_opt, plan=None, mesh=None, silo_axes=None,
+              eval_chunk: int = 8) -> FLResult:
+    """Drive a compiled plan over this tenant's padded stack.
+
+    With eval_fn, the plan is a StreamedPlan: the FL phase runs in
+    eval_chunk-round dispatches that each emit only that chunk's per-round
+    params, which are fetched to host ONCE per chunk (one device_get for
+    the whole chunk tree, not one transfer per leaf per round), evaluated,
+    and dropped — peak extra memory is eval_chunk × |params| regardless of
+    rounds. Without eval_fn, one dispatch runs the whole phase and only
+    the (rounds,) loss vector comes back."""
     if plan is None:
+        mode = "chunk" if eval_fn is not None else "none"
         plan = make_fl_plan(
             num_silos=padded.num_silos, num_batches=padded.num_batches,
             batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
             rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
-            per_example=per_example, reset_opt=reset_opt,
-            collect_params=collect, masked=padded.has_padding)
-    gp, ys = plan(init_params, *_plan_args(padded, seed))
+            per_example=per_example, reset_opt=reset_opt, collect=mode,
+            masked=padded.has_padding, mesh=mesh, silo_axes=silo_axes)
+    args = _plan_args(padded, seed)
 
-    if collect:
+    if isinstance(plan, StreamedPlan):
+        carry = plan.carry_init(init_params)
+        history: List[Dict[str, float]] = []
+        rnd0 = 0
+        while rnd0 < rounds:
+            nr = min(eval_chunk, rounds - rnd0)
+            carry, (ls, ps) = plan.step(carry, *args, jnp.int32(rnd0), nr)
+            host_ls = np.asarray(ls)
+            host_ps = jax.device_get(ps)      # one transfer for the chunk
+            for j in range(nr):
+                rec = {"round": rnd0 + j, "loss": float(host_ls[j])}
+                if eval_fn is not None:
+                    rec.update(eval_fn(
+                        jax.tree.map(lambda a: a[j], host_ps)))
+                history.append(rec)
+            rnd0 += nr
+        return FLResult(params=plan.carry_params(carry), history=history)
+
+    gp, ys = plan(init_params, *args)
+    if eval_fn is not None:
         round_losses, round_params = ys
         round_losses = np.asarray(round_losses)
+        # one host fetch for the whole (rounds, |params|) stack — the old
+        # per-round tree.map(a[rnd]) forced a device round-trip per leaf
+        # per round (ISSUE 7 satellite); the stacked mode itself remains
+        # the legacy memory-heavy path kept for regression tests.
+        host_params = jax.device_get(round_params)
         history = []
         for rnd in range(rounds):
             rec = {"round": rnd, "loss": float(round_losses[rnd])}
-            rec.update(eval_fn(jax.tree.map(lambda a: a[rnd], round_params)))
+            rec.update(eval_fn(jax.tree.map(lambda a: a[rnd], host_params)))
             history.append(rec)
     else:
         round_losses = np.asarray(ys)

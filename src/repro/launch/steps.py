@@ -97,6 +97,32 @@ def make_federated_round_step(cfg: ModelConfig, tc: TrainConfig, *,
     return round_step, opt
 
 
+def make_federated_multiround_step(cfg: ModelConfig, tc: TrainConfig, *,
+                                   use_pallas: bool = False) -> Tuple[Callable, Any]:
+    """R full FedDCL rounds as ONE compiled dispatch: a lax.scan over
+    (local phase -> fedavg_sync) round steps. Batches carry leading dims
+    (R, H, d, ...); metrics come back as (R, H) SCALARS — each leaf is
+    silo-meaned inside the scan so the stacked history stays bounded
+    regardless of d or metric rank (the same bounded-memory contract as the
+    tabular engine's streamed eval path, DESIGN.md §7). train.py's
+    --rounds-per-dispatch consumes this to amortize dispatch overhead.
+    """
+    round_step, opt = make_federated_round_step(cfg, tc, use_pallas=use_pallas)
+
+    def multiround(silo_params, silo_opt_state, batches):
+        def body(carry, b):
+            sp, so = carry
+            sp, so, ms = round_step(sp, so, b)
+            scal = jax.tree.map(
+                lambda a: jnp.mean(a.reshape(a.shape[0], -1), axis=1), ms)
+            return (sp, so), scal
+
+        (sp, so), ms = lax.scan(body, (silo_params, silo_opt_state), batches)
+        return sp, so, ms
+
+    return multiround, opt
+
+
 def make_federated_local_phase_step(cfg: ModelConfig, tc: TrainConfig, *,
                                     use_pallas: bool = False) -> Tuple[Callable, Any]:
     """H silo-local steps as one lax.scan WITHOUT the sync boundary — the

@@ -34,6 +34,7 @@ from repro.models.modality import synthetic_prefix
 
 def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
           seq: int = 256, silos: int = 1, local_steps: int = 4,
+          rounds_per_dispatch: int = 1,
           lr: float = 3e-4, seed: int = 0, non_iid: bool = False,
           log_every: int = 10, checkpoint_path: str | None = None,
           log_path: str | None = None, param_dtype: str = "float32",
@@ -95,11 +96,33 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
                     print(f"step {step:5d} loss {rec['loss']:.4f} "
                           f"({rec['elapsed_s']:.1f}s)")
 
-        for rnd in range(steps // local_steps):
+        rpd = max(rounds_per_dispatch, 1)
+        if rpd > 1:
+            # R rounds per dispatch: one lax.scan over round steps, metrics
+            # silo-meaned to (R, H) scalars inside the scan (bounded memory)
+            multi_step, _ = steps_lib.make_federated_multiround_step(cfg, tc)
+            multi_step = jax.jit(multi_step, donate_argnums=(0, 1))
+
+            def multiround_batches(step0, r, h):
+                bs = [stacked_batches(step0 + i * h, h) for i in range(r)]
+                return {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+
+        n_rounds = steps // local_steps
+        rnd = 0
+        while rnd < n_rounds:
             step0 = rnd * local_steps
-            sp, so, metrics = round_step(sp, so,
-                                         stacked_batches(step0, local_steps))
-            log_round(step0, metrics)
+            if rpd > 1 and n_rounds - rnd >= rpd:
+                sp, so, metrics = multi_step(
+                    sp, so, multiround_batches(step0, rpd, local_steps))
+                for r in range(rpd):
+                    log_round(step0 + r * local_steps,
+                              jax.tree.map(lambda a, r=r: a[r], metrics))
+                rnd += rpd
+            else:
+                sp, so, metrics = round_step(
+                    sp, so, stacked_batches(step0, local_steps))
+                log_round(step0, metrics)
+                rnd += 1
         rem = steps % local_steps
         if rem:
             # trailing steps of an unfinished round: local steps, no sync —
@@ -149,6 +172,10 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--silos", type=int, default=1)
     ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--rounds-per-dispatch", type=int, default=1,
+                    help="FedDCL rounds fused into one compiled dispatch "
+                         "(lax.scan over round steps); 1 = one dispatch per "
+                         "round (unchanged default)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--non-iid", action="store_true")
@@ -157,6 +184,7 @@ def main():
     args = ap.parse_args()
     train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
           seq=args.seq, silos=args.silos, local_steps=args.local_steps,
+          rounds_per_dispatch=args.rounds_per_dispatch,
           lr=args.lr, seed=args.seed, non_iid=args.non_iid,
           checkpoint_path=args.checkpoint, log_path=args.log)
 

@@ -145,11 +145,22 @@ def param_specs(shapes: Any, mesh: Mesh, *, fsdp: bool = True,
     return jax.tree_util.tree_map_with_path(one, shapes)
 
 
-def batch_spec(mesh: Mesh, *, federated: bool, silo_axis: Optional[str] = None,
-               ndim: int = 2) -> P:
-    """Spec for (B, S) token batches — or (d, b, S) federated batches."""
+def batch_spec(mesh: Mesh, *, federated: bool,
+               silo_axis: Optional[Any] = None, ndim: int = 2) -> P:
+    """Spec for (B, S) token batches — or federated silo stacks.
+
+    federated with a STRING silo_axis (launch-tier LLM batches, (d, b, S)):
+    silo dim over silo_axis, intra-silo batch dim over the leftover "data"
+    axis, ndim counting the per-silo batch rank. federated with a TUPLE
+    silo_axis (core.federated sharded plans, (d, n_slots, …) tabular
+    stacks): the leading silo dim spans ALL the named axes jointly —
+    ("pod", "data") on a multipod mesh — and ndim is the FULL array rank;
+    every non-silo dim stays shard-local.
+    """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if federated:
+        if silo_axis is not None and not isinstance(silo_axis, str):
+            return P(tuple(silo_axis), *([None] * (ndim - 1)))
         silo_axis = silo_axis or ("pod" if "pod" in axis_sizes else "data")
         rest = "data" if ("data" in axis_sizes and silo_axis != "data") else None
         return P(silo_axis, rest, *([None] * (ndim - 1)))

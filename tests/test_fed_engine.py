@@ -105,6 +105,44 @@ def test_scan_matches_host_with_eval_and_sgd_train():
         assert abs(a["metric"] - b["metric"]) < 1e-5
 
 
+@pytest.mark.parametrize("eval_chunk", [4, 8],
+                         ids=["two-dispatches", "one-dispatch"])
+def test_streamed_eval_history_matches_stacked(eval_chunk):
+    """Regression for the bounded-memory eval path: the chunked streamed
+    history must match (a) the legacy collect="stack" plan that
+    materialized a (rounds, |params|) stack on device, and (b) the host
+    engine — both per-round losses and eval_fn outputs. eval_chunk=4 with
+    rounds=6 exercises the ragged final dispatch (4 + 2)."""
+    silos = _linear_silos([40, 28, 52], seed=3)
+    params = _params(seed=1)
+    ev = lambda p: {"w0": float(np.asarray(
+        jax.tree_util.tree_leaves(p)[0]).ravel()[0])}
+    kw = dict(opt=adamw(1e-2), rounds=6, local_epochs=2, batch_size=16,
+              seed=7)
+    host = run_federated(_reg_loss, params, silos, engine="host", eval_fn=ev,
+                         **kw)
+    scan = run_federated(_reg_loss, params, silos, engine="scan", eval_fn=ev,
+                         eval_chunk=eval_chunk, **kw)
+    # the OLD stacked path, driven through the same runner
+    padded = pad_silo_data(silos, 16)
+    batch_loss = federated._make_batch_loss(_reg_loss, True, 0.0)
+    stacked_plan = federated.make_fl_plan(
+        num_silos=padded.num_silos, num_batches=padded.num_batches,
+        batch_size=padded.batch_size, opt=adamw(1e-2), batch_loss=batch_loss,
+        rounds=6, local_epochs=2, collect="stack", masked=padded.has_padding)
+    legacy = federated._run_scan(
+        batch_loss, params, padded, opt=adamw(1e-2), rounds=6, local_epochs=2,
+        aggregator="fedavg", seed=7, eval_fn=ev, per_example=True,
+        reset_opt=True, plan=stacked_plan)
+    assert len(scan.history) == len(legacy.history) == 6
+    for s, l, h in zip(scan.history, legacy.history, host.history):
+        assert abs(s["w0"] - l["w0"]) < 1e-6
+        assert abs(s["loss"] - l["loss"]) < 1e-6 * max(1.0, abs(l["loss"]))
+        assert abs(s["w0"] - h["w0"]) < 1e-4
+    assert _max_rel_diff(scan.params, legacy.params) < 1e-6
+    assert _max_rel_diff(scan.params, host.params) < 1e-4
+
+
 def test_momentum_optimizer_state_vmaps_through_scan():
     silos = _linear_silos([24, 24], seed=9)
     params = _params(seed=3)

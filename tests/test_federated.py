@@ -136,7 +136,8 @@ def test_no_cross_silo_collectives_in_local_step():
     replica group spans silo boundaries; the SYNC step must contain one."""
     r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-3000:]
     assert "CLEAN" in r.stdout, r.stdout

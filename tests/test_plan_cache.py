@@ -130,6 +130,46 @@ def test_lru_eviction():
     assert r.cache_stats["hit"] is False
 
 
+def test_mesh_enters_plan_key_and_never_aliases():
+    """A sharded and an unsharded plan over the same bucketed layout must
+    be distinct cache entries (their executables differ: shard_map + psums
+    vs plain vmap), while two runs on the SAME mesh share one."""
+    from repro.launch.mesh import make_host_mesh
+
+    cache = PlanCache()
+    silos = _silos(3, 20, seed=0)
+    base = _run(silos, cache)
+    mesh = make_host_mesh(model=1)
+    sharded = _run(silos, cache, mesh=mesh)
+    assert sharded.cache_stats["hit"] is False        # no alias
+    again = _run(_silos(3, 22, seed=1), cache, mesh=mesh)
+    assert again.cache_stats["hit"] is True           # same mesh -> hit
+    s = cache.stats()
+    assert s["plans"] == 2 and s["misses"] == 2 and s["hits"] == 1
+    np.testing.assert_allclose(_flat(base), _flat(sharded),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_chunk_mode_plan_is_rounds_agnostic():
+    """With eval_fn the cached plan is the streamed chunk step, which never
+    bakes `rounds` into the executable — a rounds=3 and a rounds=5 run
+    share ONE plan (the win that makes rounds≫10 configs cacheable)."""
+    cache = PlanCache()
+    silos = _silos(3, 20, seed=0)
+    ev = lambda p: {"w0": float(np.asarray(
+        jax.tree.leaves(p)[0]).ravel()[0])}
+    r3 = _run(silos, cache, rounds=3, eval_fn=ev)
+    r5 = _run(silos, cache, rounds=5, eval_fn=ev)
+    assert r3.cache_stats["hit"] is False
+    assert r5.cache_stats["hit"] is True
+    assert cache.stats()["plans"] == 1
+    assert len(r3.history) == 3 and len(r5.history) == 5
+    # the shared executable still trains: prefixes agree round-for-round
+    for a, b in zip(r3.history, r5.history):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-6)
+        assert a["w0"] == pytest.approx(b["w0"], rel=1e-6)
+
+
 def test_cache_requires_scan_engine():
     with pytest.raises(ValueError):
         _run(_silos(2, 10), PlanCache(), engine="host")
