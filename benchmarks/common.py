@@ -63,7 +63,7 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
     times: Dict[str, float] = {}
 
     for method in methods:
-        t0 = time.time()
+        t0 = time.perf_counter()
         if method == "Centralized":
             p = mlp.for_config(key, cfg, reduced=False)
             ev = (lambda pp: {"metric": metric(pp)}) if track_rounds else None
@@ -123,6 +123,6 @@ def run_all_methods(dataset: str, *, d: int = 5, c: int = 4, n_ij: int = 100,
             out[method] = metric(res.params, Xte_f)
             if track_rounds:
                 curves[method] = [h["metric"] for h in res.history]
-        times[method] = time.time() - t0
+        times[method] = time.perf_counter() - t0
 
     return {"metrics": out, "curves": curves, "task": task, "times": times}

@@ -137,10 +137,14 @@ def _collective_histogram(hlo_text: str) -> Dict[str, int]:
     return hist
 
 
-def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3) -> Dict:
+def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3,
+                       aggregator: str = "fedavg") -> Dict:
     """One worker-process case: vmap (unsharded) plan vs the same plan
     sharded over a mesh spanning every available device, plus the
-    round-boundary collective-structure check on the sharded HLO."""
+    round-boundary collective-structure check on the sharded HLO. The
+    expected structure is aggregator-aware (DESIGN.md §8): weighted
+    aggregators psum partial weighted sums; robust aggregators all_gather
+    the silo submissions and reduce only the loss scalar."""
     from repro.launch.mesh import make_host_mesh
 
     silos = _make_silos(d)
@@ -148,7 +152,7 @@ def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3) -> Dict:
     loss = lambda p, x, y: mlp.mlp_per_example_loss(p, x, y, "regression")
     batch_loss = federated._make_batch_loss(loss, True, 0.0)
     padded = pad_silo_data(silos, BATCH)
-    args = federated._plan_args(padded, 0)
+    args = federated._plan_args(padded, 0, rounds)
     devices = jax.device_count()
 
     def plan_for(mesh):
@@ -156,7 +160,7 @@ def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3) -> Dict:
             num_silos=padded.num_silos, num_batches=padded.num_batches,
             batch_size=padded.batch_size, opt=adamw(1e-3),
             batch_loss=batch_loss, rounds=rounds, local_epochs=LOCAL_EPOCHS,
-            masked=padded.has_padding, mesh=mesh)
+            aggregator=aggregator, masked=padded.has_padding, mesh=mesh)
 
     def warm_time(plan):
         out = jax.block_until_ready(plan(params, *args))     # compile
@@ -179,6 +183,7 @@ def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3) -> Dict:
 
     return {
         "devices": devices, "d": d, "rounds": rounds,
+        "aggregator": aggregator,
         "local_epochs": LOCAL_EPOCHS, "batch_size": BATCH,
         "t_vmap_warm_s": round(t_vmap, 4),
         "t_sharded_warm_s": round(t_sharded, 4),
@@ -197,25 +202,31 @@ def run_sharded_parent(fast: bool, out_path: str) -> None:
     import sys
     import tempfile
 
-    cases = [(8, 5)] if fast else [(8, 5), (32, 5), (8, 20), (32, 20)]
+    base_cases = [(8, 5)] if fast else [(8, 5), (32, 5), (8, 20), (32, 20)]
+    cases = [(d, r, "fedavg") for d, r in base_cases]
+    # robust-boundary rows: the collective structure changes (all_gather
+    # instead of psum), so each robust aggregator gets its own asserted row
+    robust = ("median",) if fast else ("median", "trimmed_mean", "krum")
+    cases += [(8, 5, agg) for agg in robust]
     rows: List[Dict] = []
     for devices in (1, 8):
         env = dict(os.environ)
         env["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={devices}")
-        for d, rounds in cases:
+        for d, rounds, agg in cases:
             with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
                 tmp = f.name
             subprocess.run(
                 [sys.executable, os.path.abspath(__file__),
                  "--sharded-worker", "--d", str(d), "--rounds", str(rounds),
-                 "--out", tmp],
+                 "--aggregator", agg, "--out", tmp],
                 env=env, check=True)
             with open(tmp) as f:
                 row = json.load(f)
             os.unlink(tmp)
             rows.append(row)
-            print(f"devices={devices} d={d:3d} rounds={rounds:3d}  "
+            print(f"devices={devices} d={d:3d} rounds={rounds:3d} "
+                  f"{agg:12s}  "
                   f"vmap {row['t_vmap_warm_s']:7.4f}s  "
                   f"sharded {row['t_sharded_warm_s']:7.4f}s  "
                   f"({row['speedup_sharded']:.2f}x)  "
@@ -233,12 +244,22 @@ def run_sharded_parent(fast: bool, out_path: str) -> None:
         tol = 1e-5 if row["rounds"] <= 5 else 1e-2
         assert row["rel_param_diff"] <= tol, row
         if row["devices"] > 1:
-            # round-boundary-only traffic: the rounds-scan body carries
-            # exactly one all-reduce per param leaf plus one for the loss,
-            # per hierarchy level (single-level host mesh here) — and no
-            # other collective kind anywhere in the module
-            assert set(row["collectives"]) == {"all-reduce"}, row
-            assert row["collectives"]["all-reduce"] == row["param_leaves"] + 1, row
+            if row["aggregator"] in federated.ROBUST_AGGREGATORS:
+                # robust boundary: one all-gather per param leaf plus one
+                # for the availability mask; the only all-reduce is the
+                # per-round loss scalar (the robust statistic itself is
+                # computed redundantly per shard on the gathered stack)
+                assert row["collectives"] == {
+                    "all-reduce": 1,
+                    "all-gather": row["param_leaves"] + 1}, row
+            else:
+                # weighted boundary: round-boundary-only traffic — exactly
+                # one all-reduce per param leaf plus one for the loss, per
+                # hierarchy level (single-level host mesh here), and no
+                # other collective kind anywhere in the module
+                assert set(row["collectives"]) == {"all-reduce"}, row
+                assert row["collectives"]["all-reduce"] == \
+                    row["param_leaves"] + 1, row
 
     out = {
         "bench": "fed_engine_sharded_vs_vmap",
@@ -248,9 +269,12 @@ def run_sharded_parent(fast: bool, out_path: str) -> None:
             "agreement_tol": "1e-5 at rounds<=5; 1e-2 sanity bound on the "
                              "rounds=20 timing rows (f32 reduction-order "
                              "seed amplified chaotically by adam)",
-            "collectives": "all-reduce only, (param_leaves + 1) per "
-                           "hierarchy level in the round-scan body — "
-                           "round boundaries only, local phase clean",
+            "collectives": "weighted aggregators: all-reduce only, "
+                           "(param_leaves + 1) per hierarchy level in the "
+                           "round-scan body — round boundaries only, local "
+                           "phase clean; robust aggregators: "
+                           "(param_leaves + 1) all-gathers (params + "
+                           "availability mask) + 1 loss all-reduce",
         },
         "cases": rows,
     }
@@ -291,10 +315,12 @@ def main():
                     help=argparse.SUPPRESS)
     ap.add_argument("--d", type=int, default=8, help=argparse.SUPPRESS)
     ap.add_argument("--rounds", type=int, default=5, help=argparse.SUPPRESS)
+    ap.add_argument("--aggregator", default="fedavg", help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     if args.sharded_worker:
-        row = bench_sharded_case(args.d, args.rounds)
+        row = bench_sharded_case(args.d, args.rounds,
+                                 aggregator=args.aggregator)
         with open(args.out, "w") as f:
             json.dump(row, f)
         return

@@ -54,7 +54,7 @@ def main():
     sp = silo_replicate(params, args.silos)
     so = jax.vmap(opt.init)(sp)
     hist = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         nb = silo_batches(cfg.vocab_size, args.seq, args.batch // args.silos,
                           args.silos, step, non_iid=True)
@@ -65,7 +65,7 @@ def main():
         if step % 10 == 0 or step == args.steps - 1:
             loss = float(jnp.mean(m["loss"]))
             hist.append({"step": step, "loss": loss,
-                         "elapsed_s": time.time() - t0})
+                         "elapsed_s": time.perf_counter() - t0})
             print(f"step {step:4d} loss {loss:.4f} ({hist[-1]['elapsed_s']:.0f}s)")
 
     import os

@@ -99,7 +99,10 @@ class FedDCL:
                  engine: str = "scan", seed: int = 0,
                  reset_opt_per_round: bool = True,
                  cache: Any = True,
-                 eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None):
+                 eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+                 dropout_rate: float = 0.0,
+                 silo_scale: Optional[Sequence[float]] = None,
+                 trim_frac: float = 0.2, krum_f: int = 1):
         self.m_tilde = m_tilde
         self.m_hat = m_hat or m_tilde
         self.hidden = tuple(hidden)
@@ -120,6 +123,14 @@ class FedDCL:
         self.reset_opt_per_round = reset_opt_per_round
         self.cache = cache
         self.eval_fn = eval_fn
+        # hostile-world federation knobs (DESIGN.md §8): aggregator may be
+        # any of federated.AGGREGATORS incl. the robust ones; dropout_rate
+        # simulates silo unavailability; silo_scale is the attack-injection
+        # vector (experiments/robust_ablation.py exercises all of these)
+        self.dropout_rate = dropout_rate
+        self.silo_scale = silo_scale
+        self.trim_frac = trim_frac
+        self.krum_f = krum_f
         # one optimizer per estimator: its identity is stable across fit()s
         self._opt = adamw(lr)
         self.setup_: Optional[FedDCLSetup] = None
@@ -157,7 +168,9 @@ class FedDCL:
             fedprox_mu=self.fedprox_mu, seed=self.seed, eval_fn=self.eval_fn,
             engine=self.engine, cache=self.cache if self.engine == "scan" else None,
             loss_id=("mlp_per_example_loss", self.task),
-            opt_id=("adamw", self.lr))
+            opt_id=("adamw", self.lr),
+            dropout_rate=self.dropout_rate, silo_scale=self.silo_scale,
+            trim_frac=self.trim_frac, krum_f=self.krum_f)
         self.setup_, self.result_ = setup, result
         self.params_ = result.params
         return setup, result

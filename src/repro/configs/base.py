@@ -157,8 +157,12 @@ class FederatedConfig:
 
     num_silos: int = 1
     local_steps: int = 4              # H — paper: epochs-per-round
-    aggregator: str = "fedavg"        # fedavg | fedprox | fedsgd
+    # fedavg | fedprox | fedsgd, or a robust boundary (DESIGN.md §8):
+    # median | trimmed_mean | krum
+    aggregator: str = "fedavg"
     fedprox_mu: float = 0.0
+    trim_frac: float = 0.2            # trimmed_mean: trim fraction per tail
+    krum_f: int = 1                   # krum: tolerated Byzantine silos
     # silo mesh axis is resolved at launch: "pod" (multi-pod) or "data".
     silo_axis: str = "auto"
 

@@ -42,6 +42,17 @@ Loss reporting: `history[rnd]["loss"]` is the sample-weighted mean over
 silos of each silo's final-local-epoch masked mean loss (the scan engine
 carries it through the scan; the host engine accumulates the same sums).
 
+HOSTILE-WORLD federation (DESIGN.md §8): the aggregation boundary can be
+made adversarial-robust (`aggregator="median" | "trimmed_mean" | "krum"` —
+masked coordinate statistics over the per-silo deltas, computed from a
+cross-silo all_gather instead of the weighted psum when sharded), silos can
+drop out mid-training (`dropout_rate` / an explicit `availability` matrix —
+the schedule is drawn on HOST, outside any shard_map manual region, and
+folded into per-round normalized weights so unavailable silos are exact
+no-ops under the §4 mask rules), and per-silo deltas can be scaled
+(`silo_scale` — the gradient-scaling attacker injection point,
+core/privacy.py).
+
 The mesh-collective primitives (`silo_vmap_step`, `fedavg_sync`,
 `scan_local_steps`) are the production form on the TPU mesh: parameters
 carry a leading silo dim sharded over the silo mesh axis, local steps are
@@ -153,6 +164,175 @@ def _norm_weights(sizes: np.ndarray) -> np.ndarray:
     return (s / s.sum()).astype(np.float32)
 
 
+# Tiny-epsilon guard for loss denominators. The old clamp max(Σw, 1.0)
+# silently DEFLATED the reported loss whenever an epoch's (or batch's) real
+# sample-weight mass was positive but < 1 — e.g. fractional per-sample
+# weights fed through a hand-built PaddedSilos/plan. For {0,1} masks the two
+# forms are identical (mass is 0 or ≥ 1), so this is numerics-neutral on
+# every production layout; tests/test_fed_robust.py pins the corrected
+# fractional-weight value on both engines.
+_DEN_EPS = 1e-12
+
+
+def make_dropout_schedule(seed: int, rounds: int, num_silos: int,
+                          rate: float,
+                          sizes: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-round silo availability mask, (rounds, num_silos) float32 {0,1}.
+
+    Drawn ON HOST (numpy; never inside a compiled program, let alone a
+    shard_map manual region — the same rule as the batch-permutation
+    schedule, see make_fl_plan's miscompile note) so both engines and every
+    sharding of the plan consume the identical schedule. Each (round, silo)
+    is an independent Bernoulli(1 - rate) draw; empty silos (sizes 0) are
+    never available, and every round is guaranteed at least one available
+    REAL silo (the max-draw silo is resurrected) so round weights stay
+    normalizable. Stragglers are modeled as round-grained dropout: a silo
+    that misses the boundary simply doesn't contribute this round."""
+    real = (np.ones(num_silos, bool) if sizes is None
+            else np.asarray(sizes) > 0)
+    if not real.any():
+        raise ValueError("dropout schedule needs at least one real silo")
+    rng = np.random.default_rng(np.asarray([seed, 0xD120], np.uint64))
+    u = rng.random((rounds, num_silos))
+    av = (u >= rate) & real[None, :]
+    dead = ~av.any(axis=1)
+    if dead.any():
+        best = np.argmax(np.where(real[None, :], u, -1.0), axis=1)
+        av[dead, best[dead]] = True
+    return av.astype(np.float32)
+
+
+def _round_weights(sizes: np.ndarray, av: Optional[np.ndarray],
+                   rounds: int) -> np.ndarray:
+    """Per-ROUND aggregation weights, (rounds, d) float32: the sample-count
+    weights masked by that round's availability and renormalized over the
+    silos that are actually present. With full availability every row equals
+    `_norm_weights(sizes)` bit-for-bit (same float64 normalize-then-cast),
+    so the no-dropout path is unchanged. Computed on host and fed to plans
+    as an ARGUMENT — dropout never enters the executable, so every dropout
+    pattern shares one compiled plan."""
+    s = np.asarray(sizes, np.float64)
+    m = np.broadcast_to(s[None, :], (rounds, len(s))).copy()
+    if av is not None:
+        m = m * np.asarray(av, np.float64)
+    tot = m.sum(axis=1, keepdims=True)
+    if np.any(tot <= 0):
+        bad = int(np.argmax(tot[:, 0] <= 0))
+        raise ValueError(
+            f"round {bad} has zero available sample mass — the availability "
+            "schedule must keep at least one real silo per round "
+            "(make_dropout_schedule guarantees this)")
+    return (m / tot).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Robust aggregation statistics (hostile-world boundary, DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+ROBUST_AGGREGATORS = ("median", "trimmed_mean", "krum")
+AGGREGATORS = ("fedavg", "fedprox", "fedsgd") + ROBUST_AGGREGATORS
+
+_MASK_BIG = 1e30        # sentinel pushed into masked-out sort slots; finite
+                        # so downstream arithmetic never meets inf/nan
+
+
+def _masked_sort(vals: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Sort (d, ...) along the silo axis with masked-out silos pushed to the
+    top: valid entries occupy sorted positions [0, k) for k = Σ mask."""
+    m = mask.reshape((-1,) + (1,) * (vals.ndim - 1))
+    v = jnp.where(m > 0, vals.astype(jnp.float32), _MASK_BIG)
+    return jnp.sort(v, axis=0)
+
+
+def masked_median(vals: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Coordinate-wise median over silos with mask=1 (dropped / empty /
+    padded silos excluded exactly). k may be a traced scalar."""
+    s = _masked_sort(vals, mask)
+    k = jnp.sum(mask).astype(jnp.int32)
+    lo = jnp.maximum((k - 1) // 2, 0)
+    hi = jnp.maximum(k // 2, 0)
+    take = lambda i: lax.dynamic_index_in_dim(s, i, 0, keepdims=False)
+    return 0.5 * (take(lo) + take(hi))
+
+
+def masked_trimmed_mean(vals: jnp.ndarray, mask: jnp.ndarray,
+                        trim_frac: float) -> jnp.ndarray:
+    """Coordinate-wise mean over the valid silos with the floor(k·trim_frac)
+    smallest AND largest values dropped per coordinate; the trim is clamped
+    so at least one value survives."""
+    d = vals.shape[0]
+    s = _masked_sort(vals, mask)
+    k = jnp.sum(mask).astype(jnp.int32)
+    t = jnp.floor(k.astype(jnp.float32) * float(trim_frac)).astype(jnp.int32)
+    t = jnp.clip(t, 0, jnp.maximum((k - 1) // 2, 0))
+    idx = jnp.arange(d, dtype=jnp.int32)
+    keep = ((idx >= t) & (idx < k - t)).astype(jnp.float32)
+    kept = jnp.tensordot(keep, s, axes=(0, 0))
+    return kept / jnp.maximum(k - 2 * t, 1).astype(jnp.float32)
+
+
+def krum_select(flat: jnp.ndarray, mask: jnp.ndarray,
+                krum_f: int) -> jnp.ndarray:
+    """Krum selection index over (d, P) flattened silo updates: each valid
+    silo is scored by the sum of its squared distances to its k−f−2 nearest
+    valid peers; the lowest score wins (Blanchard et al., NeurIPS'17).
+    Distances between params and between deltas coincide (the shared
+    round-start offset cancels), so callers may pass either."""
+    d = flat.shape[0]
+    f32 = flat.astype(jnp.float32)
+    sq = jnp.sum(f32 * f32, axis=1)
+    dist = sq[:, None] + sq[None, :] - 2.0 * (f32 @ f32.T)
+    valid = mask > 0
+    pair = valid[:, None] & valid[None, :] & ~jnp.eye(d, dtype=bool)
+    dist = jnp.where(pair, jnp.maximum(dist, 0.0), _MASK_BIG)
+    k = jnp.sum(mask).astype(jnp.int32)
+    nn = jnp.clip(k - int(krum_f) - 2, 1, jnp.maximum(k - 1, 1))
+    sd = jnp.sort(dist, axis=1)
+    neighbor = (jnp.arange(d, dtype=jnp.int32)[None, :] < nn)
+    scores = jnp.sum(jnp.where(neighbor, sd, 0.0), axis=1)
+    scores = jnp.where(valid, scores, jnp.inf)
+    return jnp.argmin(scores)
+
+
+def robust_aggregate(stacked: Any, mask: jnp.ndarray, aggregator: str, *,
+                     trim_frac: float = 0.2, krum_f: int = 1) -> Any:
+    """Robust boundary over a (d, ...) silo-stacked pytree: aggregate only
+    the silos with mask=1 (available AND real), ignoring sample weights —
+    the classical Byzantine-robust estimators are unweighted by design, so a
+    poisoned silo cannot buy influence with a large claimed sample count."""
+    if aggregator == "median":
+        return jax.tree.map(
+            lambda a: masked_median(a, mask).astype(a.dtype), stacked)
+    if aggregator == "trimmed_mean":
+        return jax.tree.map(
+            lambda a: masked_trimmed_mean(a, mask, trim_frac).astype(a.dtype),
+            stacked)
+    if aggregator == "krum":
+        leaves = jax.tree_util.tree_leaves(stacked)
+        flat = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+            axis=1)
+        best = krum_select(flat, mask, krum_f)
+        return jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, best, 0, keepdims=False),
+            stacked)
+    raise ValueError(f"unknown robust aggregator {aggregator!r}; "
+                     f"choose one of {ROBUST_AGGREGATORS}")
+
+
+def apply_silo_scale(stacked: Any, ref: Any, scale: jnp.ndarray) -> Any:
+    """Per-silo delta scaling at the boundary: silo i submits
+    ref + scale_i·(p_i − ref). The gradient-scaling attacker's injection
+    point (core/privacy.py) — and an EXACT no-op at scale=1 (the update is
+    written p + (scale−1)·(p − ref), so honest silos add literal 0.0)."""
+    def leaf(s, g):
+        sc = (scale.astype(jnp.float32) - 1.0).reshape(
+            (-1,) + (1,) * (s.ndim - 1))
+        delta = s.astype(jnp.float32) - g.astype(jnp.float32)[None]
+        return (s.astype(jnp.float32) + sc * delta).astype(s.dtype)
+    return jax.tree.map(leaf, stacked, ref)
+
+
 def round_perms(key, rnd, num_silos: int, epochs: int, n_slots: int,
                 silo_ids: Optional[jnp.ndarray] = None):
     """Minibatch schedule for one round: a (d, epochs, n_slots) permutation
@@ -199,7 +379,10 @@ def _make_batch_loss(loss_fn, per_example: bool, fedprox_mu: float):
     def batch_loss(p, x, y, w, ref):
         if per_example:
             l = loss_fn(p, x, y)
-            loss = jnp.sum(w * l) / jnp.maximum(jnp.sum(w), 1.0)
+            # tiny-eps denominator guard (see _DEN_EPS): identical to the
+            # old max(Σw, 1) for {0,1} masks (mass 0 or ≥ 1), but no longer
+            # deflates loss/gradient under fractional sample weights
+            loss = jnp.sum(w * l) / jnp.maximum(jnp.sum(w), _DEN_EPS)
         else:
             loss = loss_fn(p, x, y)
         if fedprox_mu:
@@ -279,9 +462,23 @@ def _psum_tree(tree: Any, axes: Sequence[str]) -> Any:
     axis first, outer (cross-node) axes after. For axes=("pod", "data") that
     is one psum over "data" inside each pod, then one over "pod" across the
     DCI — exactly one weighted all-reduce per leaf per level, and the ONLY
-    collectives a sharded plan contains."""
+    collectives a sharded plan with a WEIGHTED aggregator contains."""
     for ax in reversed(tuple(axes)):
         tree = jax.tree.map(lambda a: lax.psum(a, ax), tree)
+    return tree
+
+
+def _all_gather_tree(tree: Any, axes: Sequence[str]) -> Any:
+    """Hierarchical tiled all-gather of the silo dim at a ROBUST round
+    boundary (DESIGN.md §8): robust statistics are order statistics over the
+    full cross-shard silo population, which a psum of partial sums cannot
+    express — every shard must see every silo's submission. Same
+    innermost-axis-first order as _psum_tree; after the gather each shard
+    holds the full (d, …) stack and computes the identical robust aggregate
+    redundantly (replicated output, no further collective)."""
+    for ax in reversed(tuple(axes)):
+        tree = jax.tree.map(
+            lambda a: lax.all_gather(a, ax, axis=0, tiled=True), tree)
     return tree
 
 
@@ -426,6 +623,11 @@ def run_federated(
     mesh=None,
     silo_axes: Optional[Sequence[str]] = None,
     eval_chunk: int = 8,
+    dropout_rate: float = 0.0,
+    availability: Optional[np.ndarray] = None,
+    silo_scale: Optional[Sequence[float]] = None,
+    trim_frac: float = 0.2,
+    krum_f: int = 1,
 ) -> FLResult:
     """Federated training over host-resident silo datasets — the ONE trainer
     behind FedAvg / FedProx / FedSGD / FedDCL and (via baselines.sgd_train)
@@ -469,9 +671,23 @@ def run_federated(
     memory: with eval_fn, per-round params stream to host eval_chunk
     rounds per dispatch instead of materializing a (rounds, |params|)
     stack on device.
+
+    HOSTILE-WORLD options (DESIGN.md §8): aggregator may also be one of
+    `ROBUST_AGGREGATORS` — "median" / "trimmed_mean" (trim_frac per tail) /
+    "krum" (krum_f tolerated Byzantine silos) compute an UNWEIGHTED robust
+    statistic over the available silos' submissions instead of the
+    sample-weighted mean (sharded: via a cross-silo all_gather instead of
+    the psum). dropout_rate draws a per-(round, silo) Bernoulli availability
+    schedule on host (`make_dropout_schedule`; `availability` passes an
+    explicit (rounds, num_real_silos) {0,1} matrix instead); unavailable
+    silos train nothing that round (exact no-op under the §4 mask rules)
+    and carry zero aggregation weight. silo_scale (num_real_silos,)
+    multiplies each silo's submitted round delta — the gradient-scaling
+    attacker's injection point (core/privacy.py); 1.0 is an exact no-op.
     """
-    if aggregator not in ("fedavg", "fedprox", "fedsgd"):
-        raise ValueError(f"unknown aggregator {aggregator!r}")
+    if aggregator not in AGGREGATORS:
+        raise ValueError(f"unknown aggregator {aggregator!r}; "
+                         f"choose one of {AGGREGATORS}")
     if engine not in ("host", "scan"):
         raise ValueError(f"unknown engine {engine!r}; choose 'host' or 'scan'")
     if mesh is not None and engine != "scan":
@@ -520,6 +736,45 @@ def run_federated(
             "mask — pass a per-example loss (returning a (batch,) vector, "
             "e.g. models.mlp.mlp_per_example_loss) or equal-size silos "
             "divisible by batch_size")
+    if availability is not None and dropout_rate:
+        raise ValueError("pass either dropout_rate or an explicit "
+                         "availability matrix, not both")
+    av: Optional[np.ndarray] = None
+    if availability is not None:
+        av = np.asarray(availability, np.float32)
+        if av.shape[0] != rounds or av.shape[1] > padded.num_silos:
+            raise ValueError(
+                f"availability must be (rounds, num_silos≤{padded.num_silos})"
+                f" for rounds={rounds}; got {av.shape}")
+        if av.shape[1] < padded.num_silos:
+            # bucket-padding silos are empty → never available
+            av = np.concatenate(
+                [av, np.zeros((rounds, padded.num_silos - av.shape[1]),
+                              np.float32)], axis=1)
+    elif dropout_rate:
+        # draw over the REAL silo count so the schedule is invariant to
+        # bucket/shard padding (a d=6 tenant gets the same draws whether the
+        # layout pads to 6, 8, or 16 silos), then zero-pad the columns
+        d_real = len(silo_data)
+        av = make_dropout_schedule(seed, rounds, d_real,
+                                   float(dropout_rate),
+                                   sizes=padded.sizes[:d_real])
+        if padded.num_silos > d_real:
+            av = np.concatenate(
+                [av, np.zeros((rounds, padded.num_silos - d_real),
+                              np.float32)], axis=1)
+    scale_vec: Optional[np.ndarray] = None
+    if silo_scale is not None:
+        s = np.asarray(silo_scale, np.float32).reshape(-1)
+        if s.shape[0] > padded.num_silos:
+            raise ValueError(f"silo_scale has {s.shape[0]} entries for "
+                             f"{padded.num_silos} silos")
+        scale_vec = np.ones(padded.num_silos, np.float32)
+        scale_vec[:s.shape[0]] = s
+    # dropout makes whole rounds all-padding for the dropped silos, so the
+    # exact-no-op step guard must be on even when the layout itself is dense
+    needs_mask = padded.has_padding or (av is not None and not np.all(av > 0))
+    robust = aggregator in ROBUST_AGGREGATORS
     mu = fedprox_mu if aggregator == "fedprox" else 0.0
     batch_loss = _make_batch_loss(loss_fn, per_example, mu)
     if plan_cache is not None:
@@ -540,6 +795,10 @@ def run_federated(
             aggregator, None if mode == "chunk" else rounds,
             local_epochs, bool(reset_opt_per_round),
             mode, bool(per_example), float(mu),
+            # robust-config enters the EXECUTABLE (trim/f are trace-time
+            # constants), so plans differing only there must never alias;
+            # dropout/scale are runtime ARGUMENTS and stay out of the key
+            (float(trim_frac), int(krum_f)) if robust else None,
             loss_id if loss_id is not None else ("id", id(loss_fn)),
             opt_id if opt_id is not None else ("id", id(opt)),
             mesh_sig,
@@ -552,13 +811,15 @@ def run_federated(
                 rounds=rounds, local_epochs=local_epochs,
                 aggregator=aggregator, per_example=per_example,
                 reset_opt=reset_opt_per_round, collect=mode,
-                masked=True, mesh=mesh, silo_axes=axes),
+                masked=True, mesh=mesh, silo_axes=axes,
+                trim_frac=trim_frac, krum_f=krum_f),
             pins=(loss_fn, opt))
         res = _run_scan(batch_loss, init_params, padded, opt=opt,
                         rounds=rounds, local_epochs=local_epochs,
                         aggregator=aggregator, seed=seed, eval_fn=eval_fn,
                         per_example=per_example, reset_opt=reset_opt_per_round,
-                        plan=plan, eval_chunk=eval_chunk)
+                        plan=plan, eval_chunk=eval_chunk,
+                        availability=av, silo_scale=scale_vec)
         res.cache_stats = {"hit": was_hit, **plan_cache.stats()}
         return res
     if engine == "host":
@@ -566,12 +827,17 @@ def run_federated(
                          rounds=rounds, local_epochs=local_epochs,
                          aggregator=aggregator, seed=seed, eval_fn=eval_fn,
                          per_example=per_example,
-                         reset_opt=reset_opt_per_round)
+                         reset_opt=reset_opt_per_round,
+                         availability=av, silo_scale=scale_vec,
+                         trim_frac=trim_frac, krum_f=krum_f,
+                         masked=needs_mask)
     return _run_scan(batch_loss, init_params, padded, opt=opt, rounds=rounds,
                      local_epochs=local_epochs, aggregator=aggregator,
                      seed=seed, eval_fn=eval_fn, per_example=per_example,
                      reset_opt=reset_opt_per_round, mesh=mesh,
-                     silo_axes=axes, eval_chunk=eval_chunk)
+                     silo_axes=axes, eval_chunk=eval_chunk,
+                     availability=av, silo_scale=scale_vec,
+                     trim_frac=trim_frac, krum_f=krum_f, masked=needs_mask)
 
 
 # --------------------------------------------------------------------------
@@ -580,20 +846,27 @@ def run_federated(
 
 def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
               local_epochs, aggregator, seed, eval_fn, per_example,
-              reset_opt) -> FLResult:
+              reset_opt, availability=None, silo_scale=None,
+              trim_frac: float = 0.2, krum_f: int = 1,
+              masked: Optional[bool] = None) -> FLResult:
     d, nb, bs = padded.num_silos, padded.num_batches, padded.batch_size
     key = jax.random.PRNGKey(seed)
-    step = jax.jit(_make_sgd_step(batch_loss, opt, masked=padded.has_padding))
+    if masked is None:
+        masked = padded.has_padding
+    step = jax.jit(_make_sgd_step(batch_loss, opt, masked=masked))
     grad_fn = jax.jit(jax.value_and_grad(batch_loss))
     X, Y, w = padded.X, padded.Y, padded.w
-    sizes = padded.sizes
-    wn = jnp.asarray(_norm_weights(sizes))
+    robust = aggregator in ROBUST_AGGREGATORS
+    wr = _round_weights(padded.sizes, availability, rounds)   # (rounds, d)
+    scale = None if silo_scale is None else \
+        jnp.asarray(np.asarray(silo_scale, np.float32))
 
     gp = init_params
     fedsgd_state = opt.init(gp) if aggregator == "fedsgd" else None
     opt_states: List[Any] = [opt.init(gp) for _ in range(d)] if not reset_opt else []
     history: List[Dict[str, float]] = []
     for rnd in range(rounds):
+        wr_r = wr[rnd]
         if aggregator == "fedsgd":
             losses, grads = [], []
             for i in range(d):
@@ -601,16 +874,28 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
                                  jnp.asarray(w[i]), gp)
                 losses.append(li)
                 grads.append(gi)
-            g = _weighted_silo_mean(_stack_trees(grads), wn)
+            g = _stack_trees(grads)
+            if scale is not None:
+                g = jax.tree.map(
+                    lambda a: (a.astype(jnp.float32) * scale.reshape(
+                        (-1,) + (1,) * (a.ndim - 1))).astype(a.dtype), g)
+            g = _weighted_silo_mean(g, jnp.asarray(wr_r))
             updates, fedsgd_state = opt.update(g, fedsgd_state, gp)
             gp = apply_updates(gp, updates)
-            round_loss = float(jnp.sum(wn * jnp.stack(losses)))
+            round_loss = float(jnp.sum(jnp.asarray(wr_r) * jnp.stack(losses)))
         else:
             perms = np.asarray(
                 round_perms(key, rnd, d, local_epochs, padded.n_slots))
             locals_: List[Any] = []
             final_losses = np.zeros(d)
             for i in range(d):
+                if wr_r[i] <= 0:
+                    # dropped or empty silo (wr_r > 0 ⟺ real ∧ available):
+                    # trains nothing this round — the scan engine reaches the
+                    # same state via zeroed sample masks + the masked-step
+                    # no-op guard
+                    locals_.append(gp)
+                    continue
                 p = gp
                 o = opt.init(p) if reset_opt else opt_states[i]
                 for e in range(local_epochs):
@@ -630,12 +915,21 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
                                          if per_example else float(bs))
                     if e == local_epochs - 1:
                         num = sum(l * bw for l, bw in zip(ep_losses, ep_ws))
-                        final_losses[i] = float(num) / max(sum(ep_ws), 1.0)
+                        final_losses[i] = float(num) / max(sum(ep_ws),
+                                                           _DEN_EPS)
                 locals_.append(p)
                 if not reset_opt:
                     opt_states[i] = o
-            gp = _weighted_silo_mean(_stack_trees(locals_), wn)
-            round_loss = float(np.sum(sizes / sizes.sum() * final_losses))
+            sp = _stack_trees(locals_)
+            if scale is not None:
+                sp = apply_silo_scale(sp, gp, scale)
+            if robust:
+                mask = jnp.asarray((wr_r > 0).astype(np.float32))
+                gp = robust_aggregate(sp, mask, aggregator,
+                                      trim_frac=trim_frac, krum_f=krum_f)
+            else:
+                gp = _weighted_silo_mean(sp, jnp.asarray(wr_r))
+            round_loss = float(np.sum(np.float64(wr_r) * final_losses))
         rec = {"round": rnd, "loss": round_loss}
         if eval_fn is not None:
             rec.update(eval_fn(gp))
@@ -651,8 +945,9 @@ def _run_host(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
 class StreamedPlan:
     """Chunked bounded-memory form of a compiled FL plan (collect="chunk").
 
-    ``step(carry, X, Y, w, wn, key, rnd0, nr)`` advances ``nr`` rounds
-    (static) starting at round ``rnd0`` (traced) and returns
+    ``step(carry, X, Y, w, wr_chunk, scale, key, rnd0, nr)`` advances ``nr``
+    rounds (static) starting at round ``rnd0`` (traced; ``wr_chunk`` is the
+    matching (nr, d) slice of the per-round weights) and returns
     ``(carry, (losses, params_per_round))`` where the stacked params have
     leading dim ``nr`` — the CHUNK size, never the total rounds. The eval
     path's peak extra memory is chunk × |params| instead of the old
@@ -681,18 +976,31 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
                  aggregator: str = "fedavg", per_example: bool = True,
                  reset_opt: bool = True, collect_params: bool = False,
                  masked: bool = True, collect: Optional[str] = None,
-                 mesh=None, silo_axes: Optional[Sequence[str]] = None):
+                 mesh=None, silo_axes: Optional[Sequence[str]] = None,
+                 trim_frac: float = 0.2, krum_f: int = 1):
     """Build a compiled whole-FL-phase PLAN: a jitted
 
-        ``plan(init_params, X, Y, w, wn, key) -> (final_params, ys)``
+        ``plan(init_params, X, Y, w, wr, scale, key) -> (final_params, ys)``
 
-    where X (d, n_slots, …), Y, w are the padded silo stack, wn (d,) the
-    normalized per-silo sample weights (``_norm_weights``), key the PRNG key
-    that seeds the batch schedule, and ys the (rounds,) loss vector. Unlike
-    a data-closure runner, ALL tenant data enters as arguments, so one plan
-    compiles ONE executable per input-shape set and every tenant whose
-    padded shapes land in the same bucket reuses it — the unit the
-    PlanCache stores.
+    where X (d, n_slots, …), Y, w are the padded silo stack, wr (rounds, d)
+    the PER-ROUND normalized aggregation weights (``_round_weights`` —
+    every row equals ``_norm_weights(sizes)`` when no silo drops out; a
+    zero entry marks a silo unavailable that round and suppresses its local
+    training entirely), scale (d,) the per-silo delta multiplier
+    (``apply_silo_scale``; all-ones in honest runs, the attack injection
+    point otherwise), key the PRNG key that seeds the batch schedule, and
+    ys the (rounds,) loss vector. Unlike a data-closure runner, ALL tenant
+    data enters as arguments, so one plan compiles ONE executable per
+    input-shape set and every tenant whose padded shapes land in the same
+    bucket reuses it — the unit the PlanCache stores. Because wr and scale
+    are arguments too, every dropout pattern and every attack configuration
+    shares the same executable.
+
+    aggregator ∈ ROBUST_AGGREGATORS swaps the round boundary from the
+    weighted mean to a robust statistic over the available silos
+    (trim_frac / krum_f are its trace-time constants — part of the plan's
+    cache identity). Sharded robust plans all_gather the silo submissions
+    instead of psumming partial weighted sums (DESIGN.md §8).
 
     collect (back-compat bool ``collect_params`` maps onto it):
       "none"  — ys is the (rounds,) loss vector (default).
@@ -779,16 +1087,41 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
                 return (sp2, so2), (losses * bw, bw)
 
             c, (ls, ws) = lax.scan(batch_body, c, eb)
-            ep_loss = jnp.sum(ls, 0) / jnp.maximum(jnp.sum(ws, 0), 1.0)
+            # tiny-eps guard (_DEN_EPS): identical for {0,1} masks, no
+            # silent deflation when an epoch's real weight mass is < 1
+            ep_loss = jnp.sum(ls, 0) / jnp.maximum(jnp.sum(ws, 0), _DEN_EPS)
             return c, ep_loss
 
         (sp, so), ep_losses = lax.scan(
             epoch_body, (silo_replicate(gp, dl), so), bidx)
         return sp, so, ep_losses[-1]                      # (dl,)
 
-    def round_step(carry, perms, X, Y, w, wn):
+    robust = aggregator in ROBUST_AGGREGATORS
+
+    def boundary(sp, gp, wr_r, scale):
+        """Round-boundary sync of this shard's trained silo params sp:
+        apply the per-silo delta scaling (attack injection; exact no-op at
+        scale=1), then either the weighted mean (one psum per leaf per
+        level when sharded) or — for robust aggregators — a cross-silo
+        all_gather followed by the masked robust statistic, computed
+        redundantly per shard on identical gathered inputs (replicated
+        output, no further collective; the §7 sort-in-shard_map miscompile
+        concern does not bite here because every shard sorts the SAME
+        gathered array)."""
+        sp = apply_silo_scale(sp, gp, scale)
+        if not robust:
+            return reduce_tree(sp, wr_r)
+        avail = (wr_r > 0).astype(jnp.float32)
+        if axes is not None:
+            sp, avail = _all_gather_tree((sp, avail), axes)
+        return robust_aggregate(sp, avail, aggregator,
+                                trim_frac=trim_frac, krum_f=krum_f)
+
+    def round_step(carry, perms, X, Y, w, wr_r, scale):
         """One full round on this shard's silo slice (perms: this round's
-        (dl, E, n_slots) schedule): local phase + boundary sync. Returns
+        (dl, E, n_slots) schedule; wr_r: this round's (dl,) weight row —
+        zero entries are silos unavailable this round, whose sample masks
+        are zeroed so local training is an exact no-op). Returns
         (carry, round_loss, global_params)."""
         if aggregator == "fedsgd":
             gp, fs = carry
@@ -796,20 +1129,28 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
                 lambda x, y, wi: jax.value_and_grad(batch_loss)(gp, x, y,
                                                                 wi, gp)
             )(X, Y, w)
-            g = reduce_tree(grads, wn)
+            grads = jax.tree.map(
+                lambda a: (a.astype(jnp.float32) * scale.reshape(
+                    (-1,) + (1,) * (a.ndim - 1))).astype(a.dtype), grads)
+            g = reduce_tree(grads, wr_r)
             updates, fs = opt.update(g, fs, gp)
             gp = apply_updates(gp, updates)
-            return (gp, fs), reduce_sum(jnp.sum(wn * losses)), gp
+            return (gp, fs), reduce_sum(jnp.sum(wr_r * losses)), gp
+        # availability suppression: w·1.0 is bit-exact for present silos,
+        # absent silos get all-zero masks → every batch is an exact no-op
+        # under the masked-step guard (run_federated forces masked=True
+        # whenever any wr entry is zero)
+        w_eff = w * (wr_r > 0).astype(w.dtype)[:, None]
         if reset_opt:
             gp = carry
             so = jax.vmap(opt.init)(silo_replicate(gp, X.shape[0]))
-            sp, _, final_losses = local_phase(gp, so, perms, X, Y, w)
-            gp = reduce_tree(sp, wn)
-            return gp, reduce_sum(jnp.sum(wn * final_losses)), gp
+            sp, _, final_losses = local_phase(gp, so, perms, X, Y, w_eff)
+            gp = boundary(sp, gp, wr_r, scale)
+            return gp, reduce_sum(jnp.sum(wr_r * final_losses)), gp
         gp, so = carry
-        sp, so, final_losses = local_phase(gp, so, perms, X, Y, w)
-        gp = reduce_tree(sp, wn)
-        return (gp, so), reduce_sum(jnp.sum(wn * final_losses)), gp
+        sp, so, final_losses = local_phase(gp, so, perms, X, Y, w_eff)
+        gp = boundary(sp, gp, wr_r, scale)
+        return (gp, so), reduce_sum(jnp.sum(wr_r * final_losses)), gp
 
     own_state = aggregator == "fedsgd" or not reset_opt
 
@@ -826,11 +1167,13 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
     def data_specs(X, Y, w):
         """silo-axis sharding for the padded tenant stacks: leading dim over
         the (possibly hierarchical) silo axes, everything else shard-local
-        (shardingx.policy.batch_spec, federated tuple form)."""
+        (shardingx.policy.batch_spec, federated tuple form). The last two
+        entries cover wr (rounds, d — rounds replicated, silo dim sharded)
+        and scale (d,)."""
         return (batch_spec(mesh, federated=True, silo_axis=axes, ndim=X.ndim),
                 batch_spec(mesh, federated=True, silo_axis=axes, ndim=Y.ndim),
                 batch_spec(mesh, federated=True, silo_axis=axes, ndim=w.ndim),
-                P(axes))
+                P(None, axes), P(axes))
 
     def carry_specs(carry):
         rep = lambda t: jax.tree.map(lambda _: P(), t)
@@ -842,19 +1185,21 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
             lambda l: P(axes, *([None] * (l.ndim - 1))), carry[1])
         return (rep(carry[0]), silo)
 
-    def round_body_of(key, emit, X, Y, w, wn):
-        """Scan body over `sched` xs: either this round's (dl, E, n_slots)
-        schedule slice (sharded — the PRNG ran outside the manual region,
-        see make_schedule), or the scalar round index (unsharded / fedsgd —
-        the schedule is derived in-scan exactly as before)."""
+    def round_body_of(key, emit, X, Y, w, scale):
+        """Scan body over (sched, wr) xs: sched is either this round's
+        (dl, E, n_slots) schedule slice (sharded — the PRNG ran outside the
+        manual region, see make_schedule) or the scalar round index
+        (unsharded / fedsgd — the schedule is derived in-scan exactly as
+        before); wr_r is this round's (dl,) aggregation-weight row."""
         def round_body(c, x):
+            sx, wr_r = x
             if aggregator == "fedsgd":
                 pr = None
-            elif x.ndim == 0:
-                pr = round_perms(key, x, d, local_epochs, n_slots)
+            elif sx.ndim == 0:
+                pr = round_perms(key, sx, d, local_epochs, n_slots)
             else:
-                pr = x
-            c, rl, gp = round_step(c, pr, X, Y, w, wn)
+                pr = sx
+            c, rl, gp = round_step(c, pr, X, Y, w, wr_r, scale)
             return c, emit(rl, gp)
         return round_body
 
@@ -868,45 +1213,48 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
             else (lambda rl, gp: rl)
 
         @jax.jit
-        def plan(init_params, X, Y, w, wn, key):
-            def whole(init_params, X, Y, w, wn, key, sched):
+        def plan(init_params, X, Y, w, wr, scale, key):
+            def whole(init_params, X, Y, w, wr, scale, key, sched):
                 carry0 = carry_init_traced(init_params, X.shape[0])
-                c, ys = lax.scan(round_body_of(key, emit, X, Y, w, wn),
-                                 carry0, sched)
+                c, ys = lax.scan(round_body_of(key, emit, X, Y, w, scale),
+                                 carry0, (sched, wr))
                 return carry_params(c), ys
 
             sched, sspec = sched_for(key, jnp.arange(rounds))
             if axes is None:
-                return whole(init_params, X, Y, w, wn, key, sched)
-            sx, sy, sw, swn = data_specs(X, Y, w)
+                return whole(init_params, X, Y, w, wr, scale, key, sched)
+            sx, sy, sw, swr, ssc = data_specs(X, Y, w)
             return shard_map(whole, mesh,
-                             in_specs=(P(), sx, sy, sw, swn, P(), sspec),
+                             in_specs=(P(), sx, sy, sw, swr, ssc, P(),
+                                       sspec),
                              out_specs=P(), check_rep=False)(
-                init_params, X, Y, w, wn, key, sched)
+                init_params, X, Y, w, wr, scale, key, sched)
 
         return plan
 
-    # mode == "chunk": the bounded-memory streamed plan
-    def chunk_step(carry, X, Y, w, wn, key, rnd0, nr):
+    # mode == "chunk": the bounded-memory streamed plan; wr arrives as this
+    # chunk's (nr, d) ROW SLICE (the driver slices wr[rnd0:rnd0+nr]) so
+    # total rounds still never enters the executable
+    def chunk_step(carry, X, Y, w, wr, scale, key, rnd0, nr):
         emit = lambda rl, gp: (rl, gp)
 
-        def whole(carry, X, Y, w, wn, key, sched):
-            return lax.scan(round_body_of(key, emit, X, Y, w, wn),
-                            carry, sched)
+        def whole(carry, X, Y, w, wr, scale, key, sched):
+            return lax.scan(round_body_of(key, emit, X, Y, w, scale),
+                            carry, (sched, wr))
 
         sched, sspec = sched_for(key, rnd0 + jnp.arange(nr))
         if axes is None:
-            return whole(carry, X, Y, w, wn, key, sched)
-        sx, sy, sw, swn = data_specs(X, Y, w)
+            return whole(carry, X, Y, w, wr, scale, key, sched)
+        sx, sy, sw, swr, ssc = data_specs(X, Y, w)
         cs = carry_specs(carry)
         return shard_map(whole, mesh,
-                         in_specs=(cs, sx, sy, sw, swn, P(), sspec),
+                         in_specs=(cs, sx, sy, sw, swr, ssc, P(), sspec),
                          out_specs=(cs, P()), check_rep=False)(
-            carry, X, Y, w, wn, key, sched)
+            carry, X, Y, w, wr, scale, key, sched)
 
     # CPU has no buffer donation; elsewhere chunks recycle carry buffers
     donate = () if jax.default_backend() == "cpu" else (0,)
-    jitted_step = jax.jit(chunk_step, static_argnums=(7,),
+    jitted_step = jax.jit(chunk_step, static_argnums=(8,),
                           donate_argnums=donate)
 
     def carry_init(init_params):
@@ -922,10 +1270,18 @@ def make_fl_plan(*, num_silos: int, num_batches: int, batch_size: int,
                         carry_params=carry_params)
 
 
-def _plan_args(padded: PaddedSilos, seed: int):
-    """Device arguments a plan consumes for one tenant's padded stack."""
+def _plan_args(padded: PaddedSilos, seed: int, rounds: int, *,
+               availability: Optional[np.ndarray] = None,
+               silo_scale: Optional[np.ndarray] = None):
+    """Device arguments a plan consumes for one tenant's padded stack:
+    (X, Y, w, wr, scale, key). availability (rounds, d) {0,1} folds into
+    the per-round weights wr; silo_scale (d,) defaults to all-ones
+    (honest)."""
+    wr = _round_weights(padded.sizes, availability, rounds)
+    scale = (np.ones(padded.num_silos, np.float32) if silo_scale is None
+             else np.asarray(silo_scale, np.float32))
     return (jnp.asarray(padded.X), jnp.asarray(padded.Y),
-            jnp.asarray(padded.w), jnp.asarray(_norm_weights(padded.sizes)),
+            jnp.asarray(padded.w), jnp.asarray(wr), jnp.asarray(scale),
             jax.random.PRNGKey(seed))
 
 
@@ -933,28 +1289,35 @@ def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
                      local_epochs, aggregator="fedavg", seed=0,
                      per_example=True, reset_opt=True,
                      collect_params=False, mesh=None,
-                     silo_axes=None) -> Callable:
+                     silo_axes=None, availability=None, silo_scale=None,
+                     trim_frac: float = 0.2, krum_f: int = 1) -> Callable:
     """Back-compat data-closure wrapper over make_fl_plan: a
     ``run(init_params) -> (final_params, ys)`` with this tenant's padded
     stack bound. Calling the SAME runner twice reuses the compiled
     executable — what benchmarks/fed_bench.py times as the warm FL phase.
     With mesh, the plan runs sharded (the padded silo count must already be
     a multiple of the silo-shard count)."""
+    dropout = availability is not None and not np.all(
+        np.asarray(availability) > 0)
     plan = make_fl_plan(
         num_silos=padded.num_silos, num_batches=padded.num_batches,
         batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
         rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
         per_example=per_example, reset_opt=reset_opt,
-        collect_params=collect_params, masked=padded.has_padding,
-        mesh=mesh, silo_axes=silo_axes)
-    args = _plan_args(padded, seed)
+        collect_params=collect_params,
+        masked=padded.has_padding or dropout,
+        mesh=mesh, silo_axes=silo_axes, trim_frac=trim_frac, krum_f=krum_f)
+    args = _plan_args(padded, seed, rounds, availability=availability,
+                      silo_scale=silo_scale)
     return lambda init_params: plan(init_params, *args)
 
 
 def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
               local_epochs, aggregator, seed, eval_fn, per_example,
               reset_opt, plan=None, mesh=None, silo_axes=None,
-              eval_chunk: int = 8) -> FLResult:
+              eval_chunk: int = 8, availability=None, silo_scale=None,
+              trim_frac: float = 0.2, krum_f: int = 1,
+              masked: Optional[bool] = None) -> FLResult:
     """Drive a compiled plan over this tenant's padded stack.
 
     With eval_fn, the plan is a StreamedPlan: the FL phase runs in
@@ -964,6 +1327,10 @@ def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
     and dropped — peak extra memory is eval_chunk × |params| regardless of
     rounds. Without eval_fn, one dispatch runs the whole phase and only
     the (rounds,) loss vector comes back."""
+    if masked is None:
+        masked = padded.has_padding or (
+            availability is not None and not np.all(
+                np.asarray(availability) > 0))
     if plan is None:
         mode = "chunk" if eval_fn is not None else "none"
         plan = make_fl_plan(
@@ -971,16 +1338,20 @@ def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
             batch_size=padded.batch_size, opt=opt, batch_loss=batch_loss,
             rounds=rounds, local_epochs=local_epochs, aggregator=aggregator,
             per_example=per_example, reset_opt=reset_opt, collect=mode,
-            masked=padded.has_padding, mesh=mesh, silo_axes=silo_axes)
-    args = _plan_args(padded, seed)
+            masked=masked, mesh=mesh, silo_axes=silo_axes,
+            trim_frac=trim_frac, krum_f=krum_f)
+    args = _plan_args(padded, seed, rounds, availability=availability,
+                      silo_scale=silo_scale)
 
     if isinstance(plan, StreamedPlan):
+        X, Y, w, wr, scale, key = args
         carry = plan.carry_init(init_params)
         history: List[Dict[str, float]] = []
         rnd0 = 0
         while rnd0 < rounds:
             nr = min(eval_chunk, rounds - rnd0)
-            carry, (ls, ps) = plan.step(carry, *args, jnp.int32(rnd0), nr)
+            carry, (ls, ps) = plan.step(carry, X, Y, w, wr[rnd0:rnd0 + nr],
+                                        scale, key, jnp.int32(rnd0), nr)
             host_ls = np.asarray(ls)
             host_ps = jax.device_get(ps)      # one transfer for the chunk
             for j in range(nr):
@@ -1060,6 +1431,27 @@ def fedavg_sync(silo_params: Any, weights: Optional[jnp.ndarray] = None) -> Any:
         return jnp.broadcast_to(mean, p.shape).astype(p.dtype)
 
     return jax.tree.map(avg, silo_params)
+
+
+def robust_sync(silo_params: Any, aggregator: str,
+                mask: Optional[jnp.ndarray] = None, *,
+                trim_frac: float = 0.2, krum_f: int = 1) -> Any:
+    """Robust round boundary in fedavg_sync's broadcast-back form: compute
+    the masked robust statistic over the silo dim and broadcast it back so
+    every silo restarts the next round from the same point. aggregator may
+    also be a weighted one ("fedavg"/"fedprox"/"fedsgd"), which falls back
+    to fedavg_sync — launch/steps.py routes every configured aggregator
+    through this one entry point."""
+    if aggregator not in ROBUST_AGGREGATORS:
+        return fedavg_sync(silo_params)
+    d = jax.tree_util.tree_leaves(silo_params)[0].shape[0]
+    m = jnp.ones((d,), jnp.float32) if mask is None else \
+        mask.astype(jnp.float32)
+    agg = robust_aggregate(silo_params, m, aggregator,
+                           trim_frac=trim_frac, krum_f=krum_f)
+    return jax.tree.map(
+        lambda a, p: jnp.broadcast_to(a[None], p.shape).astype(p.dtype),
+        agg, silo_params)
 
 
 def fedprox_regularizer(params: Any, ref_params: Any, mu: float) -> jnp.ndarray:

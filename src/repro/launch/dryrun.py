@@ -65,7 +65,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
     #  * statically unrolled -> cost_analysis FLOPs/bytes and the HLO
     #    collective set are trip-count-honest (XLA counts loop bodies ONCE),
     #    but the CPU backend's scheduler inflates unrolled temp memory.
-    t0 = time.time()
+    t0 = time.perf_counter()
     plan = make_plan(cfg, shape, mesh, mode=mode, tc=tc, moe_impl=moe_impl)
 
     def compile_plan(unroll: bool):
@@ -86,7 +86,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
     # then carry the while-loop undercount and are flagged in the record.
     compiled_scan = compile_plan(unroll=False)  # memory source
     compiled = compiled_scan if scan_only else compile_plan(unroll=True)
-    t1 = time.time()
+    t1 = time.perf_counter()
 
     # silo boundary: contiguous pod block (multi-pod) or data row (single-pod)
     silo_block = 256 if multi_pod else 16

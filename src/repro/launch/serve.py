@@ -51,14 +51,13 @@ class BatchedServer:
                                               compute_dtype=jnp.float32))
 
     def _prefill_slot(self, slot: int, req: Request):
-        # per-slot prefill via sequential decode of the prompt (slot-local
-        # cache writes; batched prefill is the prefill_32k path)
+        # per-slot prefill on a B=1 slice of the slot's cache (every decode
+        # state leaf carries batch at axis 1): the prompt decodes as P
+        # single-sequence steps instead of P full-batch steps, and live
+        # slots' state is untouched by construction — admission cost no
+        # longer scales with the slot count. Batched prefill stays the
+        # prefill_32k path.
         toks = req.prompt
-        for i, t in enumerate(toks):
-            self.cur_tok = self.cur_tok.at[slot, 0].set(int(t))
-            self.pos = self.pos.at[slot].set(i)
-            logits, self.state = self._decode(self.params, self.state,
-                                              self.cur_tok, self.pos)
         self.pos = self.pos.at[slot].set(len(toks))
         if len(toks) == 0:
             # empty prompt: nothing to prefill (and no logits to sample
@@ -66,14 +65,30 @@ class BatchedServer:
             # batched decode step produce the first output token
             self.cur_tok = self.cur_tok.at[slot, 0].set(0)
             return
-        nxt = self._sample(logits[slot, 0])
+        sub = jax.tree.map(lambda a: a[:, slot:slot + 1], self.state)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        pos = jnp.zeros((1,), jnp.int32)
+        for i, t in enumerate(toks):
+            tok = tok.at[0, 0].set(int(t))
+            pos = pos.at[0].set(i)
+            logits, sub = self._decode(self.params, sub, tok, pos)
+        self.state = jax.tree.map(
+            lambda full, s: full.at[:, slot:slot + 1].set(s),
+            self.state, sub)
+        nxt = self._sample(logits[0, 0], req)
         req.out.append(int(nxt))
         self.cur_tok = self.cur_tok.at[slot, 0].set(int(nxt))
 
-    def _sample(self, logits: jnp.ndarray) -> int:
+    def _sample(self, logits: jnp.ndarray, req: Request) -> int:
         if self.temperature <= 0:
             return int(jnp.argmax(logits))
-        self.key, k = jax.random.split(self.key)
+        # per-request stream: the key depends only on (rid, #tokens emitted
+        # so far), never on which slot the request landed in or what its
+        # batch-mates were doing — temperature>0 output is reproducible
+        # across admission orders and slot layouts (a split-per-sample
+        # self.key made every sample depend on global serve history)
+        k = jax.random.fold_in(jax.random.fold_in(self.key, req.rid),
+                               len(req.out))
         return int(jax.random.categorical(k, logits / self.temperature))
 
     def serve(self, requests: List[Request], *, max_steps: int = 10_000
@@ -103,7 +118,7 @@ class BatchedServer:
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
-                nxt = self._sample(logits[s, 0])
+                nxt = self._sample(logits[s, 0], req)
                 req.out.append(nxt)
                 new_toks = new_toks.at[s, 0].set(nxt)
                 if len(req.out) >= req.max_new:
@@ -133,9 +148,9 @@ def main():
                     max_new=args.max_new)
             for i in range(args.requests)]
     server = BatchedServer(cfg, params, slots=args.slots, cache_len=256)
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs = server.serve(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = sum(len(v) for v in outs.values())
     print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, slots={args.slots})")

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core.federated import fedavg_sync, scan_local_steps
+from repro.core.federated import (ROBUST_AGGREGATORS, robust_sync,
+                                  scan_local_steps)
 from repro.models import backbone as bb
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
 from repro.optim.schedules import cosine_with_warmup
@@ -138,12 +139,17 @@ def make_federated_local_phase_step(cfg: ModelConfig, tc: TrainConfig, *,
 
 
 def make_fedavg_sync_step(tc: TrainConfig) -> Callable:
-    """Round boundary: average params across the silo dim (ONE all-reduce
-    over the silo mesh axis per leaf) and, per the paper, reset the local
+    """Round boundary: aggregate params across the silo dim — the weighted
+    mean (ONE all-reduce over the silo mesh axis per leaf) for the averaging
+    aggregators, or the configured robust statistic (median / trimmed_mean /
+    krum via robust_sync, DESIGN.md §8) — and, for the fedavg-family
+    boundaries that restart local state per the paper, reset the local
     optimizer state for the next round."""
+    fed = tc.federated
     def sync(silo_params, silo_opt_state):
-        p = fedavg_sync(silo_params)
-        if tc.federated.aggregator == "fedavg":
+        p = robust_sync(silo_params, fed.aggregator,
+                        trim_frac=fed.trim_frac, krum_f=fed.krum_f)
+        if fed.aggregator == "fedavg" or fed.aggregator in ROBUST_AGGREGATORS:
             silo_opt_state = jax.tree.map(jnp.zeros_like, silo_opt_state)
         return p, silo_opt_state
 

@@ -66,7 +66,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
         assert batch % silos == 0
         sp = silo_replicate(params, silos)
         so = jax.vmap(opt.init)(sp)
-        t0 = time.time()
+        t0 = time.perf_counter()
 
         def stacked_batches(step0, h):
             """Stack h consecutive per-silo batches with leading dim h."""
@@ -91,7 +91,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
                 if step % log_every == 0 or step == steps - 1:
                     rec = {"step": step,
                            "loss": float(jnp.mean(metrics["loss"][i])),
-                           "elapsed_s": time.time() - t0}
+                           "elapsed_s": time.perf_counter() - t0}
                     history.append(rec)
                     print(f"step {step:5d} loss {rec['loss']:.4f} "
                           f"({rec['elapsed_s']:.1f}s)")
@@ -137,7 +137,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
         step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
         opt_state = opt.init(params)
         stream = TokenStream(cfg.vocab_size, seq, batch, seed=seed)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(steps):
             nb = stream.batch(step)
             b = {k: jnp.asarray(v) for k, v in nb.items()}
@@ -146,7 +146,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 100, batch: int = 8,
             params, opt_state, metrics = step_fn(params, opt_state, b)
             if step % log_every == 0 or step == steps - 1:
                 rec = {"step": step, "loss": float(metrics["loss"]),
-                       "elapsed_s": time.time() - t0}
+                       "elapsed_s": time.perf_counter() - t0}
                 history.append(rec)
                 print(f"step {step:5d} loss {rec['loss']:.4f} "
                       f"({rec['elapsed_s']:.1f}s)")

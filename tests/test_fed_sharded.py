@@ -174,10 +174,16 @@ SHARDED_SCRIPT = textwrap.dedent("""
         return np.concatenate([np.ravel(np.asarray(l))
                                for l in jax.tree.leaves(r.params)])
 
-    for agg in ("fedavg", "fedprox", "fedsgd"):
+    for agg in ("fedavg", "fedprox", "fedsgd",
+                "median", "trimmed_mean", "krum"):
         kw = dict(opt=adamw(1e-2), rounds=2, local_epochs=2, batch_size=8,
                   engine="scan", seed=3, aggregator=agg,
                   fedprox_mu=0.1 if agg == "fedprox" else 0.0)
+        if agg in federated.ROBUST_AGGREGATORS:
+            # hostile extras ride along: dropout + one scaled silo — the
+            # robust sharded boundary must still match the vmap plan
+            kw.update(dropout_rate=0.25,
+                      silo_scale=[1.0, -3.0, 1.0, 1.0, 1.0])
         base = run_federated(loss, params, silos, **kw)
         sh = run_federated(loss, params, silos, mesh=mesh, **kw)
         rel = np.max(np.abs(flat(base) - flat(sh))) / (
@@ -192,24 +198,35 @@ SHARDED_SCRIPT = textwrap.dedent("""
     # would scale with E).
     batch_loss = federated._make_batch_loss(loss, True, 0.0)
     padded = pad_silo_data(silos, 8, min_silos=8)
-    args = federated._plan_args(padded, 3)
+    args = federated._plan_args(padded, 3, 2)
 
-    def n_allreduce(epochs):
+    def hist(epochs, aggregator):
         plan = federated.make_fl_plan(
             num_silos=padded.num_silos, num_batches=padded.num_batches,
             batch_size=padded.batch_size, opt=adamw(1e-2),
             batch_loss=batch_loss, rounds=2, local_epochs=epochs,
-            masked=True, mesh=mesh)
+            aggregator=aggregator, masked=True, mesh=mesh)
         txt = plan.lower(params, *args).compile().as_text()
-        for kind in ("all-gather", "all-to-all", "collective-permute",
-                     "reduce-scatter"):
-            assert not re.search(rf"= \\S+ {kind}", txt), kind
-        return len(re.findall(r"= \\S+ all-reduce(?:-start)?\\(", txt))
+        out = {}
+        for kind in ("all-reduce", "all-gather", "all-to-all",
+                     "collective-permute", "reduce-scatter"):
+            n = len(re.findall(rf"= \\S+ {kind}(?:-start)?\\(", txt))
+            if n:
+                out[kind] = n
+        return out
 
     leaves = len(jax.tree_util.tree_leaves(params))
-    n1, n3 = n_allreduce(1), n_allreduce(3)
-    assert n1 == n3 == leaves + 1, (n1, n3, leaves)
-    print("COLLECTIVES_OK", n1)
+    # weighted boundary: one all-reduce per leaf + one for the loss, no
+    # other collective, invariant to local_epochs (a leak into the local
+    # phase would scale with E)
+    h1, h3 = hist(1, "fedavg"), hist(3, "fedavg")
+    assert h1 == h3 == {"all-reduce": leaves + 1}, (h1, h3, leaves)
+    # robust boundary: the psum becomes one all-gather per leaf plus one
+    # for the availability mask; the loss all-reduce is the only reduce
+    for agg in ("median", "trimmed_mean", "krum"):
+        hr = hist(2, agg)
+        assert hr == {"all-reduce": 1, "all-gather": leaves + 1}, (agg, hr)
+    print("COLLECTIVES_OK", h1["all-reduce"])
 """)
 
 
@@ -220,7 +237,8 @@ def test_sharded_8dev_agreement_and_collective_structure():
                             "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-3000:]
-    for agg in ("fedavg", "fedprox", "fedsgd"):
+    for agg in ("fedavg", "fedprox", "fedsgd",
+                "median", "trimmed_mean", "krum"):
         assert f"AGREE {agg}" in r.stdout, r.stdout
     assert "COLLECTIVES_OK" in r.stdout, r.stdout
 

@@ -63,3 +63,54 @@ def test_slot_reuse_across_queue(tiny_params):
     outs = server.serve(reqs)
     assert sorted(outs) == [0, 1, 2, 3, 4]
     assert all(len(v) == 4 for v in outs.values())
+
+
+def test_prefill_leaves_live_slots_untouched(tiny_params):
+    """Admission prefill is a B=1 slice of the new slot's cache: the state,
+    position, and pending token of every other slot must be bit-identical
+    before and after (the old full-batch prefill re-decoded all slots P
+    times per admitted prompt)."""
+    server = BatchedServer(TINY, tiny_params, slots=3, cache_len=32)
+    req_a = Request(rid=0, prompt=np.array([1, 2, 3]), max_new=8)
+    server.active[0] = req_a
+    server._prefill_slot(0, req_a)
+    before = jax.tree.map(lambda a: np.asarray(a[:, 0:1]), server.state)
+    pos0, tok0 = int(server.pos[0]), int(server.cur_tok[0, 0])
+    req_b = Request(rid=1, prompt=np.array([7, 8, 9, 10]), max_new=8)
+    server.active[1] = req_b
+    server._prefill_slot(1, req_b)
+    after = jax.tree.map(lambda a: np.asarray(a[:, 0:1]), server.state)
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+    assert int(server.pos[0]) == pos0
+    assert int(server.cur_tok[0, 0]) == tok0
+
+
+def test_live_output_invariant_to_admission(tiny_params):
+    """A request's greedy output must not change because other requests
+    were admitted into neighboring slots mid-flight."""
+    solo = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    ref = solo.serve([Request(rid=0, prompt=np.array([3, 1, 4]),
+                              max_new=6)])[0]
+    busy = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    reqs = [Request(rid=0, prompt=np.array([3, 1, 4]), max_new=6)] + [
+        Request(rid=i, prompt=np.array([i, i + 1]), max_new=2)
+        for i in range(1, 4)]
+    outs = busy.serve(reqs)
+    assert outs[0] == ref
+
+
+def test_temperature_sampling_reproducible(tiny_params):
+    """temperature>0 sampling keys on (rid, tokens emitted) — the same
+    request produces the same stream whether it runs alone in 1 slot or
+    shares a 3-slot table with a batch-mate (the old split-per-sample key
+    tied every draw to global serve history)."""
+    def run(slots, extra):
+        server = BatchedServer(TINY, tiny_params, slots=slots, cache_len=32,
+                               temperature=1.0, seed=7)
+        reqs = [Request(rid=0, prompt=np.array([2, 3]), max_new=5)]
+        if extra:
+            reqs.append(Request(rid=1, prompt=np.array([9, 8, 7]),
+                                max_new=5))
+        return server.serve(reqs)[0]
+
+    assert run(1, False) == run(3, True)
