@@ -121,20 +121,9 @@ def bench_case(d: int, rounds: int, *, warm_iters: int = 3) -> Dict:
     }
 
 
-_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all",
-                "collective-permute", "reduce-scatter")
-
-
-def _collective_histogram(hlo_text: str) -> Dict[str, int]:
-    """Count collective ops in compiled HLO (async -start forms counted
-    once; -done/update lines skipped so pairs aren't double-counted)."""
-    import re
-    hist: Dict[str, int] = {}
-    for kind in _COLLECTIVES:
-        n = len(re.findall(rf"= \S+ {kind}(?:-start)?\(", hlo_text))
-        if n:
-            hist[kind] = n
-    return hist
+# collective counting lives in repro.analysis.hlo_audit (DESIGN.md §9) —
+# the one census implementation shared with the tests and feddcl_audit
+from repro.analysis import collective_census as _collective_histogram  # noqa: E402,E501
 
 
 def bench_sharded_case(d: int, rounds: int, *, warm_iters: int = 3,

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""feddcl_lint — AST lint enforcing the repo's regression-derived
+invariants (repro.analysis.lint, rules R001–R008; DESIGN.md §9).
+
+  PYTHONPATH=src python scripts/feddcl_lint.py            # human output
+  PYTHONPATH=src python scripts/feddcl_lint.py --json     # machine output
+  PYTHONPATH=src python scripts/feddcl_lint.py src tests  # explicit roots
+
+Exit status: 0 clean, 1 violations found, 2 bad invocation. Deliberate
+exceptions are allowlisted in-source with
+`# feddcl-lint: disable=Rxxx  <justification>`.
+
+Stdlib-only (no jax import): runs on bare CI runners before any
+dependency install.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.analysis.lint import (RULES, iter_python_files, lint_file,  # noqa: E402
+                                 violations_json)
+
+# the surfaces the invariants govern (ISSUE 9): library + every committed
+# driver that feeds results/ artifacts
+DEFAULT_ROOTS = ("src", "benchmarks", "experiments", "examples", "scripts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("roots", nargs="*", default=None,
+                    help=f"files/directories to lint (default: "
+                         f"{' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable JSON on stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules to report "
+                         "(default: all)")
+    args = ap.parse_args(argv)
+
+    repo_root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             os.pardir)
+    roots = args.roots or [os.path.join(repo_root, r)
+                           for r in DEFAULT_ROOTS
+                           if os.path.exists(os.path.join(repo_root, r))]
+    if not roots:
+        print("feddcl_lint: no lintable roots found", file=sys.stderr)
+        return 2
+    only = None
+    if args.rules:
+        only = {r.strip().upper() for r in args.rules.split(",") if r.strip()}
+        unknown = only - set(RULES)
+        if unknown:
+            print(f"feddcl_lint: unknown rule(s) {sorted(unknown)}; "
+                  f"known: {sorted(RULES)}", file=sys.stderr)
+            return 2
+
+    files = list(iter_python_files(roots))
+    violations = []
+    for path in files:
+        for v in lint_file(path):
+            if only is None or v.rule in only:
+                # report paths relative to the repo root for stable output
+                v.path = os.path.relpath(v.path, repo_root) \
+                    if os.path.isabs(v.path) else v.path
+                violations.append(v)
+
+    if args.json:
+        print(violations_json(violations, files_checked=len(files)))
+    else:
+        for v in violations:
+            print(v.format())
+        print(f"feddcl_lint: {len(violations)} violation(s) in "
+              f"{len(files)} file(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Static analysis & artifact auditing (DESIGN.md §9).
+
+Two layers guard the repo's hard-won invariants:
+
+- `repro.analysis.lint` — stdlib-only AST lint (rules R001–R008, each one
+  a past regression), driven by `scripts/feddcl_lint.py`.
+- `repro.analysis.hlo_audit` — compiled-artifact auditor: collective
+  census, the baked-tenant-data privacy check, and the CompileCounter
+  recompile sentinel (imports jax; loaded lazily so the linter stays
+  importable on bare runners).
+"""
+from repro.analysis.lint import (RULES, Violation, lint_file, lint_paths,
+                                 lint_source, violations_json)
+
+__all__ = [
+    "RULES", "Violation", "lint_file", "lint_paths", "lint_source",
+    "violations_json",
+    "COLLECTIVE_KINDS", "BakedDataError", "CompileCounter",
+    "assert_no_baked_data", "collective_census", "find_baked_constants",
+]
+
+_HLO_NAMES = {"COLLECTIVE_KINDS", "BakedDataError", "CompileCounter",
+              "assert_no_baked_data", "collective_census",
+              "find_baked_constants"}
+
+
+def __getattr__(name):
+    # hlo_audit imports jax at module load; defer so `import repro.analysis`
+    # (and the lint CLI) works on runners without jax installed
+    if name in _HLO_NAMES:
+        from repro.analysis import hlo_audit
+        return getattr(hlo_audit, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

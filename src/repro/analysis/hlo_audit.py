@@ -1,0 +1,174 @@
+"""Compiled-artifact auditor: enforce the privacy and performance
+invariants on the EXECUTABLE, not just the source (DESIGN.md §9).
+
+Three tools, each generalizing a check that previously lived as ad-hoc
+code inside individual tests:
+
+`collective_census(lowered)` — the collective-op histogram of a compiled
+    module. A sharded weighted plan must hold exactly
+    {all-reduce: leaves+1} per hierarchy level, a robust plan
+    {all-reduce: 1, all-gather: leaves+1}, and an UNSHARDED plan no
+    collective at all (tests/test_fed_sharded.py, tests/test_fed_robust.py,
+    benchmarks/fed_bench.py --sharded all consume this one function now).
+
+`assert_no_baked_data(lowered)` — the artifact-level privacy check. Before
+    data-as-arguments plans (PR 3) the jitted runner closed over tenant
+    arrays and XLA baked them into the executable as large dense
+    constants: raw silo data INSIDE the compiled artifact, the exact
+    non-sharing guarantee FedDCL exists to provide (arXiv 2409.18356)
+    broken where no source-level review would see it. This walks the
+    lowered StableHLO for large non-splat constants and raises
+    `BakedDataError` naming them. Splat constants (zeros/ones fills from
+    padding or init) carry no information and pass at any size.
+
+`CompileCounter` — a recompile sentinel: counts XLA backend compilations
+    inside a `with` block by hooking `jax._src.compiler.backend_compile`.
+    Warm-path tests assert `count == 0` directly instead of inferring
+    "no recompile" from a 29–60× timing ratio that goes flaky on loaded
+    CI runners (tests/test_plan_cache.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "all-to-all",
+                    "collective-permute", "reduce-scatter")
+
+
+def _as_compiled_text(lowered: Any) -> str:
+    """Compiled-HLO text from a jax Lowered/Compiled/str. Async collective
+    forms appear post-compile, so the census always counts the compiled
+    module (what actually runs), not the StableHLO input."""
+    if isinstance(lowered, str):
+        return lowered
+    if hasattr(lowered, "compile"):           # jax.stages.Lowered
+        lowered = lowered.compile()
+    if hasattr(lowered, "as_text"):           # jax.stages.Compiled
+        return lowered.as_text()
+    raise TypeError(
+        f"expected a jax Lowered/Compiled or HLO text, got {type(lowered)}")
+
+
+def collective_census(lowered: Any,
+                      kinds: Tuple[str, ...] = COLLECTIVE_KINDS
+                      ) -> Dict[str, int]:
+    """Histogram of collective ops in a compiled module, keyed by kind,
+    zero-count kinds omitted. Async `-start` forms count once (`-done`
+    lines don't match, so start/done pairs aren't double-counted) — the
+    exact counting rule the sharded tests pinned their asserted counts
+    with, now in one place."""
+    txt = _as_compiled_text(lowered)
+    out: Dict[str, int] = {}
+    for kind in kinds:
+        n = len(re.findall(rf"= \S+ {kind}(?:-start)?\(", txt))
+        if n:
+            out[kind] = n
+    return out
+
+
+class BakedDataError(AssertionError):
+    """The lowered program embeds a large dense constant — tenant data (or
+    another runtime-sized array) was captured by closure and baked into
+    the executable instead of entering as an argument."""
+
+
+def _stablehlo_text(lowered: Any) -> str:
+    if isinstance(lowered, str):
+        return lowered
+    if hasattr(lowered, "as_text"):           # Lowered: StableHLO pre-compile
+        return lowered.as_text()
+    raise TypeError(
+        f"expected a jax Lowered or StableHLO text, got {type(lowered)}")
+
+
+_CONST_RE = re.compile(
+    r"(?:stablehlo\.constant|mhlo\.constant)\s+"
+    r"(dense<[^>]*>|dense_resource<[^>]*>)\s*:\s*tensor<([^>]*)>")
+
+
+def _tensor_elems(tensor_sig: str) -> Tuple[int, str]:
+    """("64x32xf32") -> (2048, "f32"); scalar signatures have no dims."""
+    parts = tensor_sig.split("x")
+    dims = [p for p in parts if p.isdigit()]
+    dtype = parts[-1]
+    n = 1
+    for d in dims:
+        n *= int(d)
+    return n, dtype
+
+
+def find_baked_constants(lowered: Any, min_elems: int = 1024
+                         ) -> List[Dict[str, Any]]:
+    """Large NON-SPLAT dense constants in the lowered StableHLO.
+
+    A splat (`dense<0.0e+00> : tensor<128x64xf32>`) encodes one value —
+    a padding/init fill, not data. A non-splat literal (an element list
+    `dense<[...]>`, a raw hex blob `dense<"0x...">`, or an elided
+    `dense_resource<...>` — MLIR elides literals precisely because they
+    are big) of `min_elems` or more elements is a baked array."""
+    txt = _stablehlo_text(lowered)
+    found: List[Dict[str, Any]] = []
+    for m in _CONST_RE.finditer(txt):
+        literal, sig = m.group(1), m.group(2)
+        body = literal[literal.index("<") + 1:-1]
+        non_splat = (literal.startswith("dense_resource")
+                     or body.startswith("[") or body.startswith('"'))
+        if not non_splat:
+            continue
+        elems, dtype = _tensor_elems(sig)
+        if elems >= min_elems:
+            found.append({"elements": elems, "dtype": dtype,
+                          "type": f"tensor<{sig}>",
+                          "literal_head": literal[:48]})
+    return found
+
+
+def assert_no_baked_data(lowered: Any, min_elems: int = 1024) -> None:
+    """Raise `BakedDataError` if the lowered program embeds any non-splat
+    dense constant of >= min_elems elements — the PR 3 artifact-level
+    privacy leak (tenant arrays inside the compiled plan). Passing means:
+    every runtime-sized array reaches the executable as an ARGUMENT."""
+    baked = find_baked_constants(lowered, min_elems=min_elems)
+    if baked:
+        detail = ", ".join(
+            f"{b['type']} ({b['elements']} elems)" for b in baked[:8])
+        raise BakedDataError(
+            f"lowered program embeds {len(baked)} dense constant(s) of "
+            f">={min_elems} elements: {detail} — data captured by closure "
+            "is baked into the executable (the non-sharing guarantee "
+            "broken at the artifact level); pass arrays as plan arguments "
+            "(core/federated.make_fl_plan)")
+
+
+class CompileCounter:
+    """Count XLA backend compilations inside a `with` block.
+
+    Hooks `jax._src.compiler.backend_compile` — the single funnel every
+    fresh executable build passes through in jax 0.4.x (jit C++ cache
+    hits, plan-cache hits, and persistent-compilation-cache disk hits all
+    bypass it). `count == 0` therefore IS "the warm path rebuilt
+    nothing", with none of the timing-ratio flakiness. Reentrant
+    `with` blocks nest; the hook is removed on exit even on error."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self._orig = None
+
+    def __enter__(self) -> "CompileCounter":
+        import jax._src.compiler as _compiler
+        self._compiler = _compiler
+        self._orig = _compiler.backend_compile
+        orig = self._orig
+
+        def counting_backend_compile(*args, **kwargs):
+            self.count += 1
+            return orig(*args, **kwargs)
+
+        _compiler.backend_compile = counting_backend_compile
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._compiler.backend_compile = self._orig
+        self._orig = None
+        return None

@@ -593,7 +593,7 @@ class FLResult:
 
 def fedavg_average(params_list: Sequence[Any], weights: Sequence[float]) -> Any:
     w = np.asarray(weights, np.float64)
-    w = w / w.sum()
+    w = w / max(w.sum(), _DEN_EPS)
     return jax.tree.map(
         lambda *ps: sum(wi * p.astype(jnp.float32) for wi, p in zip(w, ps)).astype(ps[0].dtype),
         *params_list,
@@ -1285,6 +1285,30 @@ def _plan_args(padded: PaddedSilos, seed: int, rounds: int, *,
             jax.random.PRNGKey(seed))
 
 
+def lower_fl_plan(plan, init_params, padded: PaddedSilos, *, rounds: int,
+                  seed: int = 0, availability: Optional[np.ndarray] = None,
+                  silo_scale: Optional[np.ndarray] = None,
+                  eval_chunk: int = 8):
+    """Lower a `make_fl_plan` plan over a tenant's padded stack WITHOUT
+    executing it — the hook the artifact auditor drives
+    (`repro.analysis.hlo_audit`): `collective_census(lowered)` checks the
+    round-boundary communication structure and `assert_no_baked_data`
+    checks that no tenant array was baked into the trace as a constant.
+    Works for both plan forms: a plain jitted plan lowers over the full
+    argument tuple; a `StreamedPlan` lowers its chunk step (one
+    min(eval_chunk, rounds)-round dispatch, the unit that actually
+    compiles)."""
+    args = _plan_args(padded, seed, rounds, availability=availability,
+                      silo_scale=silo_scale)
+    if isinstance(plan, StreamedPlan):
+        X, Y, w, wr, scale, key = args
+        nr = min(int(eval_chunk), int(rounds))
+        carry = plan.carry_init(init_params)
+        return plan.step.lower(carry, X, Y, w, wr[:nr], scale, key,
+                               jnp.int32(0), nr)
+    return plan.lower(init_params, *args)
+
+
 def make_scan_runner(batch_loss, padded: PaddedSilos, *, opt, rounds,
                      local_epochs, aggregator="fedavg", seed=0,
                      per_example=True, reset_opt=True,
@@ -1353,7 +1377,8 @@ def _run_scan(batch_loss, init_params, padded: PaddedSilos, *, opt, rounds,
             carry, (ls, ps) = plan.step(carry, X, Y, w, wr[rnd0:rnd0 + nr],
                                         scale, key, jnp.int32(rnd0), nr)
             host_ls = np.asarray(ls)
-            host_ps = jax.device_get(ps)      # one transfer for the chunk
+            # feddcl-lint: disable=R008  one transfer per eval_chunk rounds (the batched form the rule asks for), not one per round
+            host_ps = jax.device_get(ps)
             for j in range(nr):
                 rec = {"round": rnd0 + j, "loss": float(host_ls[j])}
                 if eval_fn is not None:
@@ -1426,7 +1451,8 @@ def fedavg_sync(silo_params: Any, weights: Optional[jnp.ndarray] = None) -> Any:
         if weights is None:
             mean = jnp.mean(pf, axis=0, keepdims=True)
         else:
-            w = (weights / jnp.sum(weights)).astype(jnp.float32)
+            w = (weights /
+                 jnp.maximum(jnp.sum(weights), _DEN_EPS)).astype(jnp.float32)
             mean = jnp.tensordot(w, pf, axes=(0, 0))[None]
         return jnp.broadcast_to(mean, p.shape).astype(p.dtype)
 

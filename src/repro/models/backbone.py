@@ -315,6 +315,7 @@ def softmax_xent(logits, labels, mask):
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = (logz - gold) * mask
+    # feddcl-lint: disable=R006  mask is a {0,1} token count: real mass is >= 1 so the 1.0 clamp never deflates, it only turns the all-masked batch into 0/1 = 0 instead of 0/0
     return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
 
 

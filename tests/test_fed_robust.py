@@ -327,3 +327,31 @@ def test_registry_contains_all_aggregators():
         run_federated(_reg_loss, _params(), _linear_silos([8]),
                       opt=adamw(1e-2), rounds=1, local_epochs=1,
                       batch_size=8, aggregator="fedfoo")
+
+
+# --------------------------------------------------------------------------
+# compiled-plan structure (repro.analysis): unsharded plans are
+# collective-free and never bake tenant data into the executable
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("aggregator", ["fedavg", "median", "trimmed_mean",
+                                        "krum"])
+def test_unsharded_plan_collective_free_and_data_free(aggregator):
+    """Without a mesh the whole plan is a single-device program: the
+    collective census must be empty (any all-gather/all-reduce here would
+    mean the robust boundary leaked shard_map machinery into the vmap
+    path), and the lowered module must not embed the silo data."""
+    from repro.analysis import assert_no_baked_data, collective_census
+    from repro.core.federated import pad_silo_data
+
+    silos = _linear_silos([24, 17, 20], m=8, seed=3)
+    params = _params(m=8, seed=3)
+    padded = pad_silo_data(silos, 8)
+    bl = federated._make_batch_loss(_reg_loss, True, 0.0)
+    plan = federated.make_fl_plan(
+        num_silos=padded.num_silos, num_batches=padded.num_batches,
+        batch_size=padded.batch_size, opt=adamw(1e-2), batch_loss=bl,
+        rounds=2, local_epochs=2, aggregator=aggregator, masked=True)
+    lowered = plan.lower(params, *federated._plan_args(padded, 0, 2))
+    assert collective_census(lowered) == {}
+    assert_no_baked_data(lowered, min_elems=256)

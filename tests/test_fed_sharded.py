@@ -146,10 +146,10 @@ def test_hierarchical_pod_data_mesh_matches_unsharded():
 SHARDED_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import re
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from repro.analysis import assert_no_baked_data, collective_census
     from repro.core import federated
     from repro.core.federated import pad_silo_data, run_federated
     from repro.launch.mesh import make_host_mesh
@@ -191,11 +191,12 @@ SHARDED_SCRIPT = textwrap.dedent("""
         assert rel <= 1e-5, (agg, rel)
         print("AGREE", agg, rel)
 
-    # collective structure: lower the sharded plan and count collectives.
-    # The rounds-scan body must hold exactly one all-reduce per param leaf
-    # plus one for the loss, per hierarchy level — and the count must not
-    # change with local_epochs (a leak of collectives into the local phase
-    # would scale with E).
+    # collective structure: lower the sharded plan and census collectives
+    # via repro.analysis (same regex the old inline counter used, so the
+    # asserted counts are bit-identical). The rounds-scan body must hold
+    # exactly one all-reduce per param leaf plus one for the loss, per
+    # hierarchy level — and the count must not change with local_epochs (a
+    # leak of collectives into the local phase would scale with E).
     batch_loss = federated._make_batch_loss(loss, True, 0.0)
     padded = pad_silo_data(silos, 8, min_silos=8)
     args = federated._plan_args(padded, 3, 2)
@@ -206,14 +207,10 @@ SHARDED_SCRIPT = textwrap.dedent("""
             batch_size=padded.batch_size, opt=adamw(1e-2),
             batch_loss=batch_loss, rounds=2, local_epochs=epochs,
             aggregator=aggregator, masked=True, mesh=mesh)
-        txt = plan.lower(params, *args).compile().as_text()
-        out = {}
-        for kind in ("all-reduce", "all-gather", "all-to-all",
-                     "collective-permute", "reduce-scatter"):
-            n = len(re.findall(rf"= \\S+ {kind}(?:-start)?\\(", txt))
-            if n:
-                out[kind] = n
-        return out
+        lowered = plan.lower(params, *args)
+        # piggyback the privacy audit: no plan flavor may bake tenant data
+        assert_no_baked_data(lowered, min_elems=512)
+        return collective_census(lowered)
 
     leaves = len(jax.tree_util.tree_leaves(params))
     # weighted boundary: one all-reduce per leaf + one for the loss, no

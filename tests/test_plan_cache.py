@@ -91,6 +91,21 @@ def test_cached_scan_matches_host_on_bucketed_layout():
     np.testing.assert_allclose(_flat(res), _flat(host), rtol=1e-4, atol=1e-5)
 
 
+def test_warm_plan_cache_hit_compiles_nothing():
+    """The direct claim behind the cache tier: a warm hit builds ZERO new
+    executables (CompileCounter patches the backend compiler, so this can't
+    be fooled by fast-but-recompiling paths the old timing checks missed)."""
+    from repro.analysis import CompileCounter
+
+    cache = PlanCache()
+    tenant = _silos(3, 20, seed=0)
+    _run(tenant, cache)                          # cold: builds + warms jits
+    with CompileCounter() as cc:
+        warm = _run(_silos(3, 20, seed=1), cache)    # same shapes, new data
+    assert warm.cache_stats["hit"] is True
+    assert cc.count == 0, f"warm cache hit compiled {cc.count} modules"
+
+
 # ---------------------------------------------------------------------------
 # counters, bucket sharing, aliasing, eviction
 # ---------------------------------------------------------------------------
@@ -228,6 +243,26 @@ def test_api_fit_reuses_executables_across_tenants():
     assert yhat.shape == (24, 1) and np.all(np.isfinite(yhat))
     assert np.isfinite(m2.score(Xs2[0][0], Ys2[0][0]))
     assert setup2.collab_X[0].shape[1] == 4
+
+
+def test_api_fit_warm_path_compiles_nothing():
+    """End-to-end recompile sentinel: a second same-shape tenant through
+    FedDCL.fit() must not build a single executable — the FL plan comes
+    from the shared PlanCache and every collab-phase jit re-hits its trace
+    cache (tenants must share shapes: a different n would legitimately
+    recompile the collab projections)."""
+    from repro.analysis import CompileCounter
+    from repro.api import FedDCL
+    from repro.core.federated import default_plan_cache
+
+    default_plan_cache().clear()
+    m1 = FedDCL(m_tilde=4, anchor_r=64, rounds=2, local_epochs=1, seed=0)
+    m1.fit(*_groups(20, 0))
+    m2 = FedDCL(m_tilde=4, anchor_r=64, rounds=2, local_epochs=1, seed=1)
+    with CompileCounter() as cc:
+        _, res2 = m2.fit(*_groups(20, 1))
+    assert res2.cache_stats["hit"] is True
+    assert cc.count == 0, f"warm fit() compiled {cc.count} modules"
 
 
 # ---------------------------------------------------------------------------
