@@ -102,7 +102,8 @@ class FedDCL:
                  eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
                  dropout_rate: float = 0.0,
                  silo_scale: Optional[Sequence[float]] = None,
-                 trim_frac: float = 0.2, krum_f: int = 1):
+                 trim_frac: float = 0.2, krum_f: int = 1,
+                 onboard: bool = True):
         self.m_tilde = m_tilde
         self.m_hat = m_hat or m_tilde
         self.hidden = tuple(hidden)
@@ -131,6 +132,10 @@ class FedDCL:
         self.silo_scale = silo_scale
         self.trim_frac = trim_frac
         self.krum_f = krum_f
+        # onboard=True keeps the incremental-update state (cached Grams and
+        # QR factors, DESIGN.md §10) so partial_fit()/serve().onboard_* can
+        # admit tenants without a full protocol recompute
+        self.onboard = onboard
         # one optimizer per estimator: its identity is stable across fit()s
         self._opt = adamw(lr)
         self.setup_: Optional[FedDCLSetup] = None
@@ -156,7 +161,7 @@ class FedDCL:
             Xs, Ys, m_tilde=self.m_tilde, m_hat=self.m_hat,
             anchor_r=self.anchor_r, anchor_kind=self.anchor_kind,
             mapping_kind=self.mapping_kind, seed=self.seed,
-            svd_backend=self.svd_backend)
+            svd_backend=self.svd_backend, onboard=self.onboard)
         out_dim = self._infer_out_dim(Ys)
         params = init_params if init_params is not None else mlp.init_mlp_params(
             jax.random.PRNGKey(self.seed), self.m_hat, self.hidden, out_dim)
@@ -174,6 +179,55 @@ class FedDCL:
         self.setup_, self.result_ = setup, result
         self.params_ = result.params
         return setup, result
+
+    # -- incremental onboarding (DESIGN.md §10) ----------------------------
+
+    def partial_fit(self, X_new: Any, Y_new: Any, *,
+                    group: Optional[int] = None,
+                    refit_rounds: Optional[int] = None) -> Tuple[int, int]:
+        """Onboard new data onto a FITTED estimator without recomputing the
+        protocol: with ``group=i``, (X_new, Y_new) is ONE new user joining
+        group i; with ``group=None``, they are lists of per-user arrays
+        forming a whole new silo. The collaboration solve updates
+        incrementally (blocked Gram + cached factors; equal to a from-scratch
+        ``run_protocol`` on the same anchor, tested to 1e-5).
+
+        ``refit_rounds`` optionally continues federated training for that
+        many rounds on the refreshed representations, warm-starting from the
+        current params (the central SVD moved, so every silo's X̂ changed
+        slightly). Returns the (group, user) index of the newcomer.
+        """
+        if self.setup_ is None:
+            raise RuntimeError("call fit() before partial_fit()")
+        if group is None:
+            i = self.setup_.onboard_silo(list(X_new), list(Y_new))
+            j = 0
+        else:
+            i = int(group)
+            j = self.setup_.onboard_user(i, X_new, Y_new)
+        if refit_rounds:
+            loss = partial(mlp.mlp_per_example_loss, task=self.task)
+            result = run_federated(
+                loss, self.params_, self.setup_.fed_silos(), opt=self._opt,
+                rounds=int(refit_rounds), local_epochs=self.local_epochs,
+                batch_size=self.batch_size, aggregator=self.aggregator,
+                fedprox_mu=self.fedprox_mu, seed=self.seed + 1,
+                eval_fn=self.eval_fn, engine=self.engine,
+                cache=self.cache if self.engine == "scan" else None,
+                loss_id=("mlp_per_example_loss", self.task),
+                opt_id=("adamw", self.lr),
+                dropout_rate=self.dropout_rate, silo_scale=self.silo_scale,
+                trim_frac=self.trim_frac, krum_f=self.krum_f)
+            self.result_ = result
+            self.params_ = result.params
+        return i, j
+
+    def serve(self, **kw) -> Any:
+        """A live ``ServeCollab`` server over the fitted model: queued,
+        bucketed, continuously-admitted inference for every tenant, with
+        ``onboard_user``/``onboard_silo`` for admitting tenants in place."""
+        from repro.serve_collab import ServeCollab
+        return ServeCollab.from_model(self, **kw)
 
     # -- inference ---------------------------------------------------------
 

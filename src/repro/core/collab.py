@@ -102,6 +102,48 @@ class HostBackend:
         """Per-user X̂_j = X̃_j G_j — serial float64 matmuls."""
         return [np.asarray(x, np.float64) @ g for x, g in zip(Xs, Gs)]
 
+    # -- incremental onboarding (DESIGN.md §10) ----------------------------
+
+    def gram(self, A: np.ndarray) -> np.ndarray:
+        """AᵀA in float64 — the maintained state of a group's anchor stack."""
+        A = np.asarray(A, np.float64)
+        return A.T @ A
+
+    def gram_update_blocked(self, gram: np.ndarray, A_old: np.ndarray,
+                            A_new: np.ndarray) -> np.ndarray:
+        """Gram([A_old A_new]) from the maintained Gram(A_old): only the
+        cross and new blocks are computed — O(r·W·w) vs O(r·(W+w)²)."""
+        A_old = np.asarray(A_old, np.float64)
+        A_new = np.asarray(A_new, np.float64)
+        cross = A_old.T @ A_new
+        return np.block([[gram, cross], [cross.T, A_new.T @ A_new]])
+
+    def topk_svd_from_gram(self, A: np.ndarray, gram: np.ndarray, k: int):
+        """Rank-k singular triple recovered from the MAINTAINED Gram:
+        eigh(AᵀA) gives (s², V); U = A V / s. Same sign convention as
+        `topk_svd`, ~1e-10 relative agreement for separated spectra."""
+        A = np.asarray(A, np.float64)
+        k = int(min(k, *A.shape))
+        evals, evecs = np.linalg.eigh(np.asarray(gram, np.float64))
+        s = np.sqrt(np.maximum(evals[::-1][:k], 0.0))
+        V = evecs[:, ::-1][:, :k]
+        U = (A @ V) / np.maximum(s, 1e-12)[None, :]
+        return _fix_signs(U, s, V)
+
+    def factor_G_many(self, anchors: Sequence[np.ndarray]):
+        """Per-user reduced QR of Ã_j (float64) — the Z-independent half of
+        eq. (3), cached across onboarding events."""
+        return [np.linalg.qr(np.asarray(a, np.float64)) for a in anchors]
+
+    def factor_G_append(self, factors, a_new: np.ndarray):
+        return list(factors) + [np.linalg.qr(np.asarray(a_new, np.float64))]
+
+    def solve_G_factors(self, factors, Z: np.ndarray) -> List[np.ndarray]:
+        """Eq. (3) for every user from cached factors: one triangular solve
+        per user against the refreshed target, zero re-factorizations."""
+        Z = np.asarray(Z, np.float64)
+        return [np.linalg.solve(r, q.T @ Z) for q, r in factors]
+
 
 class DeviceBackend:
     """Jitted batched path: one Gram+eigh launch for all groups, one QR
@@ -171,6 +213,92 @@ class DeviceBackend:
                                                   jnp.asarray(Gp)))
         return [out[u, : x.shape[0], : g.shape[1]]
                 for u, (x, g) in enumerate(zip(Xs, Gs))]
+
+    # -- incremental onboarding (DESIGN.md §10) ----------------------------
+
+    def gram(self, A: np.ndarray) -> np.ndarray:
+        """AᵀA via the device Gram reduction (fp32) — same arithmetic the
+        batched from-scratch path uses, so maintained and recomputed Grams
+        agree to fp32 roundoff."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        return np.asarray(gram_ops.gram(jnp.asarray(A, jnp.float32)))
+
+    def gram_update_blocked(self, gram: np.ndarray, A_old: np.ndarray,
+                            A_new: np.ndarray) -> np.ndarray:
+        """Blocked device update: one jitted launch computing only the
+        cross/new blocks (gram_ops.gram_append_blocked, B=1)."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        out = gram_ops.gram_append_blocked(
+            jnp.asarray(gram, jnp.float32)[None],
+            jnp.asarray(A_old, jnp.float32)[None],
+            jnp.asarray(A_new, jnp.float32)[None])
+        return np.asarray(out[0])
+
+    def topk_svd_from_gram(self, A: np.ndarray, gram: np.ndarray, k: int):
+        """Batched eigh+recovery from the maintained Gram (B=1) — the same
+        `eigh_topk_recover_batched` tail the from-scratch device SVD runs,
+        just fed the incrementally-updated Gram."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        k_eff = int(min(k, *A.shape))
+        U, s, V = gram_ops.eigh_topk_recover_batched(
+            jnp.asarray(gram, jnp.float32)[None],
+            jnp.asarray(A, jnp.float32)[None], k_eff)
+        return _fix_signs(np.asarray(U[0]), np.asarray(s[0]),
+                          np.asarray(V[0]))
+
+    def factor_G_many(self, anchors: Sequence[np.ndarray]):
+        """ONE batched QR factorization of the (padded) augmented anchor
+        stack — the Z-independent half of `solve_G_batched`, cached."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        padded, mask = pad_ragged(anchors)
+        q, rr = gram_ops.solve_G_factor_batched(
+            jnp.asarray(padded), jnp.asarray(mask), ridge=self.ridge)
+        return {"q": q, "rr": rr, "mask": mask,
+                "r": padded.shape[1],
+                "widths": [a.shape[1] for a in anchors]}
+
+    def factor_G_append(self, factors, a_new: np.ndarray):
+        """Factor ONLY the joining tenant (B=1 at the stack's pad width) and
+        append it to the cached factor stack. Returns None when the new
+        anchor is wider than the current pad width (or taller than the
+        factored row count) — the caller re-factors the whole group then."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        m_max = factors["mask"].shape[1]
+        if a_new.shape[1] > m_max or a_new.shape[0] != factors["r"]:
+            return None
+        padded, mask = pad_ragged([a_new])
+        if m_max > padded.shape[2]:
+            pad = m_max - padded.shape[2]
+            padded = np.pad(padded, ((0, 0), (0, 0), (0, pad)))
+            mask = np.pad(mask, ((0, 0), (0, pad)))
+        q1, rr1 = gram_ops.solve_G_factor_batched(
+            jnp.asarray(padded), jnp.asarray(mask), ridge=self.ridge)
+        return {"q": jnp.concatenate([factors["q"], q1], axis=0),
+                "rr": jnp.concatenate([factors["rr"], rr1], axis=0),
+                "mask": np.concatenate([factors["mask"], mask], axis=0),
+                "r": factors["r"],
+                "widths": factors["widths"] + [a_new.shape[1]]}
+
+    def solve_G_factors(self, factors, Z: np.ndarray) -> List[np.ndarray]:
+        """All users of a group re-solved against a refreshed Z in ONE
+        batched triangular solve from the cached factors."""
+        import jax.numpy as jnp
+        from repro.kernels.gram import ops as gram_ops
+        G = np.asarray(gram_ops.solve_G_from_factors(
+            factors["q"], factors["rr"], jnp.asarray(Z, jnp.float32),
+            jnp.asarray(factors["mask"])))
+        if not np.all(np.isfinite(G)):
+            bad = [b for b in range(G.shape[0])
+                   if not np.all(np.isfinite(G[b]))]
+            raise FloatingPointError(
+                f"device least-squares produced non-finite G for users {bad} "
+                "from cached factors — see DeviceBackend.solve_G_many")
+        return [G[b, :w] for b, w in enumerate(factors["widths"])]
 
 
 _BACKENDS = {"host": HostBackend, "device": DeviceBackend, "tpu": DeviceBackend}

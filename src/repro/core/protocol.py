@@ -59,6 +59,34 @@ class CommLog:
 
 
 @dataclass
+class OnboardState:
+    """Maintained protocol state enabling incremental tenant onboarding
+    (DESIGN.md §10) — everything a from-scratch `run_protocol` would have
+    to recompute, kept warm so a new user/silo joins at the cost of ITS OWN
+    step-2/3 work plus cheap blocked updates:
+
+      inter_A / inter_X — every user's anchor/data intermediate
+          representations (step 2 never re-run for existing tenants)
+      grams     — per-group Gram of the stacked anchors, grown by blocked
+          cross-products on onboarding (collab.gram_update_blocked)
+      bases_B   — per-group B̃^(i); only the group that gained a tenant
+          re-derives its basis (small eigh of the maintained Gram)
+      g_factors — per-group cached QR factors of every user's Ã_j: a Z
+          refresh re-solves ALL G's with triangular solves only
+    """
+    seed: int
+    m_tilde: int
+    m_hat: int
+    mapping_kind: str
+    backend: Any                                 # svd_backend as given
+    inter_A: List[List[np.ndarray]]
+    inter_X: List[List[np.ndarray]]
+    grams: List[np.ndarray]
+    bases_B: List[np.ndarray]
+    g_factors: List[Any]
+
+
+@dataclass
 class FedDCLSetup:
     """Everything produced by protocol steps 1–3 (before model training)."""
     anchor: np.ndarray
@@ -69,6 +97,7 @@ class FedDCLSetup:
     comm: CommLog
     m_hat: int
     Z: Optional[np.ndarray] = None               # central target (r, m̂)
+    onboard: Optional[OnboardState] = None       # run_protocol(onboard=True)
 
     def user_transform(self, i: int, j: int) -> Callable[[np.ndarray], np.ndarray]:
         """x -> f_j^(i)(x) G_j^(i) — the per-user input map of the final
@@ -81,6 +110,136 @@ class FedDCLSetup:
         core.federated.run_federated (either engine — the scan engine pads
         and moves them device-resident in one shot)."""
         return list(zip(self.collab_X, self.collab_Y))
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.mappings)
+
+    def num_users(self, i: Optional[int] = None) -> int:
+        if i is not None:
+            return len(self.mappings[i])
+        return sum(len(row) for row in self.mappings)
+
+    # -- incremental onboarding (DESIGN.md §10) ----------------------------
+
+    def _require_onboard(self) -> OnboardState:
+        if self.onboard is None:
+            raise RuntimeError(
+                "this FedDCLSetup was built without onboarding state — "
+                "run_protocol(..., onboard=True) (FedDCL.fit does)")
+        return self.onboard
+
+    def onboard_user(self, i: int, X_new: np.ndarray,
+                     Y_new: np.ndarray) -> int:
+        """A new user joins existing group i on a LIVE setup: fits only the
+        newcomer's private map, extends group i's Gram by blocked
+        cross-products, re-derives that group's basis from the small
+        maintained Gram (never the O(r·W²) anchor reduction), refreshes the
+        tiny central SVD with the protocol's exact RNG streams, and
+        re-solves G's from cached QR factors — only the newcomer is ever
+        factored. Equal to a from-scratch `run_protocol` over the full
+        roster against the same anchor (≤1e-8 host / ≤1e-5 device, tested).
+
+        Returns the new user's index j within group i.
+        """
+        st = self._require_onboard()
+        be = collab.get_backend(st.backend)
+        j = len(self.mappings[i])
+        X_new = np.asarray(X_new, np.float64)
+        f = fit_mapping(st.mapping_kind, X_new, st.m_tilde,
+                        seed=st.seed * 1009 + i * 101 + j)
+        Xt, At = f(X_new), f(self.anchor)
+        self.comm.log(f"user({i},{j})", f"dc({i})", "X~,A~,Y", Xt, At, Y_new)
+        A_old = np.concatenate(st.inter_A[i], axis=1)
+        st.grams[i] = be.gram_update_blocked(st.grams[i], A_old, At)
+        st.inter_A[i].append(At)
+        st.inter_X[i].append(Xt)
+        self.mappings[i].append(f)
+        fac = be.factor_G_append(st.g_factors[i], At)
+        if fac is None:                 # wider than the factored pad width
+            fac = be.factor_G_many(st.inter_A[i])
+        st.g_factors[i] = fac
+        self._refresh_group_basis(i)
+        self._refresh_central_and_G(changed_groups=(i,))
+        self.collab_Y[i] = np.concatenate(
+            [self.collab_Y[i], np.asarray(Y_new)], axis=0)
+        return j
+
+    def onboard_silo(self, Xs_new: Sequence[np.ndarray],
+                     Ys_new: Sequence[np.ndarray]) -> int:
+        """A whole new DC group (institution) joins: step 2 runs for ITS
+        users only, its Gram/basis are computed fresh (they are new), the
+        central target is refreshed over d+1 bases, and every existing
+        user's G is re-solved from cached factors. Returns the new group
+        index i."""
+        st = self._require_onboard()
+        be = collab.get_backend(st.backend)
+        i = len(self.mappings)
+        row_f, row_x, row_a = [], [], []
+        for j, X in enumerate(Xs_new):
+            X = np.asarray(X, np.float64)
+            f = fit_mapping(st.mapping_kind, X, st.m_tilde,
+                            seed=st.seed * 1009 + i * 101 + j)
+            row_f.append(f)
+            Xt, At = f(X), f(self.anchor)
+            row_x.append(Xt)
+            row_a.append(At)
+            self.comm.log(f"user({i},{j})", f"dc({i})", "X~,A~,Y",
+                          Xt, At, Ys_new[j])
+        A = np.concatenate(row_a, axis=1)
+        st.inter_A.append(row_a)
+        st.inter_X.append(row_x)
+        st.grams.append(be.gram(A))
+        st.g_factors.append(be.factor_G_many(row_a))
+        self.mappings.append(row_f)
+        self.Gs.append([])
+        rng = np.random.default_rng(st.seed * 31 + i)
+        svd = be.topk_svd(A, st.m_hat)
+        st.bases_B.append(collab._basis_from_svd(
+            svd, rng, [a.shape[1] for a in row_a]).B)
+        self.collab_X.append(np.zeros((0, st.m_hat)))   # filled by refresh
+        self.collab_Y.append(np.concatenate(
+            [np.asarray(y) for y in Ys_new], axis=0))
+        self._refresh_central_and_G(changed_groups=(i,))
+        return i
+
+    def _refresh_group_basis(self, i: int) -> None:
+        """Re-derive B̃^(i) from the MAINTAINED Gram — eigh of a (W, W)
+        matrix plus one (r, W)·(W, m̂) recovery matmul — replaying the same
+        per-group RNG stream `run_protocol` would use."""
+        st = self.onboard
+        be = collab.get_backend(st.backend)
+        A = np.concatenate(st.inter_A[i], axis=1)
+        svd = be.topk_svd_from_gram(A, st.grams[i], st.m_hat)
+        rng = np.random.default_rng(st.seed * 31 + i)
+        st.bases_B[i] = collab._basis_from_svd(
+            svd, rng, [a.shape[1] for a in st.inter_A[i]]).B
+
+    def _refresh_central_and_G(self, changed_groups: Sequence[int] = ()) -> None:
+        """Steps 3b/3c/12 after a basis changed: recompute the (tiny)
+        central SVD → Z, re-solve every user's G from cached QR factors
+        (one batched triangular solve per group), and refresh the
+        collaboration representations X̂ = X̃ G from the cached X̃."""
+        st = self.onboard
+        be = collab.get_backend(st.backend)
+        for i in changed_groups:
+            self.comm.log(f"dc({i})", "fl", "B~", st.bases_B[i])
+        target = collab.central_target(
+            [collab.GroupBasis(B=B) for B in st.bases_B],
+            st.m_hat, st.seed * 57, backend=st.backend)
+        self.Z = target.Z
+        d = len(st.inter_A)
+        for i in range(d):
+            self.comm.log("fl", f"dc({i})", "Z", target.Z)
+            self.Gs[i] = be.solve_G_factors(st.g_factors[i], target.Z)
+        flat_X = [x for row in st.inter_X for x in row]
+        flat_G = [g for row in self.Gs for g in row]
+        flat_XG = collab.apply_G_all(flat_X, flat_G, backend=st.backend)
+        k = 0
+        for i in range(d):
+            c_i = len(st.inter_X[i])
+            self.collab_X[i] = np.concatenate(flat_XG[k:k + c_i], axis=0)
+            k += c_i
 
 
 def run_protocol(
@@ -95,6 +254,8 @@ def run_protocol(
     seed: int = 0,
     svd_backend: str = "host",
     fixed_W: Optional[np.ndarray] = None,
+    anchor: Optional[np.ndarray] = None,
+    onboard: bool = False,
 ) -> FedDCLSetup:
     """Steps 1–3 + 12 of Algorithm 1 (everything except the FL training,
     which core/federated.run_federated performs on the returned collab_X).
@@ -103,17 +264,31 @@ def run_protocol(
     "host" is the serial NumPy float64 reference; "device" (alias "tpu")
     runs one batched Gram+eigh launch for all d groups and one batched QR
     least-squares for all users — no per-group or per-user Python-loop
-    linear algebra on the hot path."""
+    linear algebra on the hot path.
+
+    `anchor` supplies a pre-agreed anchor dataset instead of deriving one
+    from the pooled data — the protocol's real deployment shape (the anchor
+    is fixed once and later tenants adopt it) and what makes incremental
+    onboarding exactly comparable to a from-scratch rerun.
+
+    `onboard=True` additionally retains the `OnboardState` (per-user
+    intermediate representations, per-group Grams, cached G factors) that
+    `FedDCLSetup.onboard_user`/`onboard_silo` need — a little extra setup
+    compute and memory, so it is opt-in (FedDCL.fit opts in)."""
     d = len(Xs)
     m = Xs[0][0].shape[1]
     m_hat = m_hat or m_tilde
     comm = CommLog()
 
     # ---- Step 1: shared anchor (same seed everywhere) --------------------
-    allX = np.concatenate([np.concatenate(list(g), axis=0) for g in Xs], axis=0)
-    anchor = make_anchor(anchor_kind, seed, anchor_r,
-                         feat_min=allX.min(0), feat_max=allX.max(0),
-                         public_sample=allX[:: max(1, len(allX) // 512)])
+    if anchor is None:
+        allX = np.concatenate([np.concatenate(list(g), axis=0) for g in Xs],
+                              axis=0)
+        anchor = make_anchor(anchor_kind, seed, anchor_r,
+                             feat_min=allX.min(0), feat_max=allX.max(0),
+                             public_sample=allX[:: max(1, len(allX) // 512)])
+    else:
+        anchor = np.asarray(anchor, np.float64)
 
     # ---- Step 2: private maps + intermediate representations -------------
     mappings: List[List[LinearMap]] = []
@@ -166,9 +341,22 @@ def run_protocol(
         collab_Y.append(np.concatenate(list(Ys[i]), axis=0))
         k += c_i
 
+    state = None
+    if onboard:
+        be = collab.get_backend(svd_backend)
+        stacked = [np.concatenate(row, axis=1) for row in inter_A]
+        state = OnboardState(
+            seed=seed, m_tilde=m_tilde, m_hat=m_hat,
+            mapping_kind=mapping_kind, backend=svd_backend,
+            inter_A=[list(row) for row in inter_A],
+            inter_X=[list(row) for row in inter_X],
+            grams=[be.gram(A) for A in stacked],
+            bases_B=[gb.B for gb in bases],
+            g_factors=[be.factor_G_many(row) for row in inter_A])
+
     return FedDCLSetup(anchor=anchor, mappings=mappings, Gs=Gs,
                        collab_X=collab_X, collab_Y=collab_Y, comm=comm,
-                       m_hat=m_hat, Z=target.Z)
+                       m_hat=m_hat, Z=target.Z, onboard=state)
 
 
 def finalize_user_models(setup: FedDCLSetup, h: Callable[[np.ndarray], np.ndarray],

@@ -69,6 +69,19 @@ def gram_eigh_topk_batched(a, k: int, *, backend: str = "auto"):
     top-k slots as long as k ≤ rank of the real block.
     """
     g = gram_batched(a, backend=backend)              # (B, m, m)
+    return eigh_topk_recover_batched(g, a, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def eigh_topk_recover_batched(g, a, k: int):
+    """Rank-k singular recovery from a PRECOMPUTED Gram stack: the shared
+    tail of `gram_eigh_topk_batched` and the incremental-onboarding path,
+    where g was maintained by `gram_append_blocked` instead of being
+    reduced from scratch.
+
+    g: (B, m, m) Gram stack AᵀA;  a: (B, r, m) the matrices themselves
+    (needed to recover the left factors U = A V / s).
+    """
     evals, evecs = jnp.linalg.eigh(g)                 # ascending, batched
     evals = evals[:, ::-1][:, :k]
     V = evecs[:, :, ::-1][:, :, :k]                   # (B, m, k)
@@ -76,6 +89,30 @@ def gram_eigh_topk_batched(a, k: int, *, backend: str = "auto"):
     U = jnp.einsum("brm,bmk->brk", a.astype(jnp.float32), V)
     U = U / jnp.maximum(s, 1e-12)[:, None, :]
     return U, s, V
+
+
+@jax.jit
+def gram_append_blocked(g, a_old, a_new):
+    """Blocked incremental Gram update for tenant onboarding: given the
+    maintained Gram g = A_oldᵀA_old and the w new columns a_new joining the
+    stack, return Gram([A_old A_new]) computing ONLY the cross and new
+    blocks —
+
+        [[ g          A_oldᵀA_new ]
+         [ (·)ᵀ       A_newᵀA_new ]]
+
+    O(r·W·w) work instead of the O(r·(W+w)²) full reduction, batched over
+    a leading group axis.
+
+    g: (B, W, W);  a_old: (B, r, W);  a_new: (B, r, w) -> (B, W+w, W+w).
+    """
+    a_old = a_old.astype(jnp.float32)
+    a_new = a_new.astype(jnp.float32)
+    cross = jnp.einsum("brw,brv->bwv", a_old, a_new)      # (B, W, w)
+    new = jnp.einsum("brv,bru->bvu", a_new, a_new)        # (B, w, w)
+    top = jnp.concatenate([g.astype(jnp.float32), cross], axis=2)
+    bot = jnp.concatenate([jnp.swapaxes(cross, 1, 2), new], axis=2)
+    return jnp.concatenate([top, bot], axis=1)
 
 
 @jax.jit
@@ -124,11 +161,24 @@ def solve_G_batched(a, z, col_mask=None, ridge: float = 0.0):
     the cost of an O(ridge²·κ²) relative perturbation on well-conditioned
     directions.
     """
+    q, rr = solve_G_factor_batched(a, col_mask, ridge=ridge)
+    return solve_G_from_factors(q, rr, z, col_mask)
+
+
+@jax.jit
+def solve_G_factor_batched(a, col_mask=None, ridge: float = 0.0):
+    """Factor half of `solve_G_batched`: the batched reduced QR of the
+    augmented anchor stacks. Returns (q (B, r+m_max, m_max),
+    rr (B, m_max, m_max)).
+
+    The factors depend only on the anchors, never on the target Z — the
+    incremental-onboarding path caches them per tenant so a Z refresh
+    (a new tenant shifted the central target) re-solves every G with
+    `solve_G_from_factors` alone: one triangular solve per tenant, zero
+    re-factorizations.
+    """
     a = a.astype(jnp.float32)
     b, r, m_max = a.shape
-    if z.ndim == 2:
-        z = jnp.broadcast_to(z[None], (b,) + z.shape)
-    z = z.astype(jnp.float32)
     if col_mask is None:
         col_mask = jnp.ones((b, m_max), dtype=bool)
     maskf = col_mask.astype(jnp.float32)              # (B, m_max)
@@ -136,9 +186,21 @@ def solve_G_batched(a, z, col_mask=None, ridge: float = 0.0):
     diag = (1.0 - maskf) + maskf * (ridge * scale[:, None])
     aug = diag[:, :, None] * jnp.eye(m_max, dtype=jnp.float32)[None]
     a_aug = jnp.concatenate([a, aug], axis=1)         # (B, r+m_max, m_max)
+    return jnp.linalg.qr(a_aug)                       # reduced, batched
+
+
+@jax.jit
+def solve_G_from_factors(q, rr, z, col_mask=None):
+    """Apply half of `solve_G_batched`: G = R⁻¹ Qᵀ [Z; 0] from cached QR
+    factors. z: (r, m_hat) shared target or (B, r, m_hat) per-batch."""
+    b, _, m_max = rr.shape
+    if z.ndim == 2:
+        z = jnp.broadcast_to(z[None], (b,) + z.shape)
+    z = z.astype(jnp.float32)
+    if col_mask is None:
+        col_mask = jnp.ones((b, m_max), dtype=bool)
     z_aug = jnp.concatenate(
         [z, jnp.zeros((b, m_max, z.shape[-1]), z.dtype)], axis=1)
-    q, rr = jnp.linalg.qr(a_aug)                      # reduced, batched
     rhs = jnp.einsum("bnm,bnh->bmh", q, z_aug)
     G = jax.scipy.linalg.solve_triangular(rr, rhs, lower=False)
     return G * col_mask[:, :, None]

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -29,6 +30,21 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+
+
+class ServeResult(Dict[int, List[int]]):
+    """{rid: tokens} plus `.status`: {rid: done|truncated|pending}.
+
+    `serve()` stops at `max_steps` whether or not every request finished;
+    without per-request status a half-decoded request was indistinguishable
+    from a finished one. "done" reached `max_new`, "truncated" was admitted
+    and emitted tokens but got cut off, "pending" never reached a slot.
+    """
+
+    def __init__(self, outputs: Dict[int, List[int]],
+                 status: Dict[int, str]):
+        super().__init__(outputs)
+        self.status = status
 
 
 class BatchedServer:
@@ -92,14 +108,14 @@ class BatchedServer:
         return int(jax.random.categorical(k, logits / self.temperature))
 
     def serve(self, requests: List[Request], *, max_steps: int = 10_000
-              ) -> Dict[int, List[int]]:
-        queue = list(requests)
+              ) -> ServeResult:
+        queue = deque(requests)        # FIFO: O(1) popleft, not list.pop(0)
         steps = 0
         while (any(self.active) or queue) and steps < max_steps:
             # admit
             for s in range(self.slots):
                 if self.active[s] is None and queue:
-                    req = queue.pop(0)
+                    req = queue.popleft()
                     self.active[s] = req
                     self._prefill_slot(s, req)
             if not any(self.active):
@@ -127,7 +143,10 @@ class BatchedServer:
                     self.pos = self.pos.at[s].set(0)       # ...and reset it
                     new_toks = new_toks.at[s, 0].set(0)
             self.cur_tok = new_toks
-        return {r.rid: r.out for r in requests}
+        status = {r.rid: ("done" if r.done
+                          else "truncated" if r.out else "pending")
+                  for r in requests}
+        return ServeResult({r.rid: r.out for r in requests}, status)
 
 
 def main():

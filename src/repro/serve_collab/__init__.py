@@ -1,0 +1,14 @@
+"""Multi-tenant collaboration serving (DESIGN.md §10): heterogeneous
+x → f_j(x) G_j → h requests queued, bucketed by (group, pow2 batch width),
+and served by one resident jitted batch step per shape bucket through the
+shared PlanCache — plus incremental onboarding of users/silos onto a live
+server."""
+from repro.serve_collab.server import (CollabRequest, ServeCollab,
+                                       ServeOutput, serve_step)
+from repro.serve_collab.tables import (TenantTable, build_table,
+                                       build_tables, combined_user_map)
+
+__all__ = [
+    "CollabRequest", "ServeCollab", "ServeOutput", "serve_step",
+    "TenantTable", "build_table", "build_tables", "combined_user_map",
+]

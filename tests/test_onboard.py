@@ -1,0 +1,146 @@
+"""Incremental onboarding == from-scratch protocol recompute (DESIGN.md §10).
+
+The whole point of the blocked-Gram / cached-factor path is that admitting
+a tenant onto a live deployment produces THE SAME collaboration solve a
+full `run_protocol` over all tenants would — the only thing shared is the
+anchor (fixed once at deployment, passed via `run_protocol(anchor=...)`).
+Property-style sweep: ragged per-user shapes, several group layouts, both
+backends, user- and silo-onboarding, and repeated onboarding (error must
+not compound past the bar).
+
+Bars: 1e-8 for the host backend (both paths are f64 LAPACK — agreement is
+near-exact), 1e-5 for the device backend (fp32 Gram/eigh/QR arithmetic).
+"""
+import numpy as np
+import pytest
+
+from repro.core import protocol
+
+BACKENDS = [("host", 1e-8), ("device", 1e-5)]
+
+
+def _mkdata(rng, counts, m, lo=20, hi=45):
+    Xs = [[rng.standard_normal((int(rng.integers(lo, hi)), m))
+           for _ in range(c)] for c in counts]
+    Ys = [[rng.standard_normal((x.shape[0], 1)) for x in row] for row in Xs]
+    return Xs, Ys
+
+
+def _assert_setups_match(inc, ref, tol):
+    """Incremental setup vs from-scratch reference: Z, every G, every X̂."""
+    scale = max(1.0, float(np.abs(ref.Z).max()))
+    assert np.abs(np.asarray(inc.Z) - np.asarray(ref.Z)).max() / scale < tol
+    assert inc.num_groups == ref.num_groups
+    for i in range(ref.num_groups):
+        assert inc.num_users(i) == ref.num_users(i)
+        for j in range(ref.num_users(i)):
+            g_inc, g_ref = np.asarray(inc.Gs[i][j]), np.asarray(ref.Gs[i][j])
+            s = max(1.0, float(np.abs(g_ref).max()))
+            assert np.abs(g_inc - g_ref).max() / s < tol, (i, j)
+        x_inc, x_ref = np.asarray(inc.collab_X[i]), np.asarray(ref.collab_X[i])
+        assert x_inc.shape == x_ref.shape
+        s = max(1.0, float(np.abs(x_ref).max()))
+        assert np.abs(x_inc - x_ref).max() / s < tol, i
+        np.testing.assert_allclose(inc.collab_Y[i], ref.collab_Y[i])
+
+
+@pytest.mark.parametrize("backend,tol", BACKENDS)
+@pytest.mark.parametrize("counts", [[2, 3], [3, 1, 2]])
+def test_onboard_user_matches_full_recompute(backend, tol, counts):
+    rng = np.random.default_rng(hash((backend, len(counts))) % 2**31)
+    m = 7
+    Xs, Ys = _mkdata(rng, counts, m)
+    Xn = rng.standard_normal((33, m))
+    Yn = rng.standard_normal((33, 1))
+    kw = dict(m_tilde=4, anchor_r=120, seed=3, svd_backend=backend)
+
+    setup = protocol.run_protocol(Xs, Ys, onboard=True, **kw)
+    tgt = int(rng.integers(0, len(counts)))
+    j = setup.onboard_user(tgt, Xn, Yn)
+    assert j == counts[tgt]
+
+    Xs2 = [list(row) for row in Xs]
+    Ys2 = [list(row) for row in Ys]
+    Xs2[tgt].append(Xn)
+    Ys2[tgt].append(Yn)
+    ref = protocol.run_protocol(Xs2, Ys2, anchor=setup.anchor, **kw)
+    _assert_setups_match(setup, ref, tol)
+
+
+@pytest.mark.parametrize("backend,tol", BACKENDS)
+def test_onboard_silo_matches_full_recompute(backend, tol):
+    rng = np.random.default_rng(11)
+    m = 6
+    Xs, Ys = _mkdata(rng, [2, 2], m)
+    Xn = [rng.standard_normal((int(rng.integers(25, 40)), m))
+          for _ in range(3)]
+    Yn = [rng.standard_normal((x.shape[0], 1)) for x in Xn]
+    kw = dict(m_tilde=4, anchor_r=100, seed=0, svd_backend=backend)
+
+    setup = protocol.run_protocol(Xs, Ys, onboard=True, **kw)
+    i = setup.onboard_silo(Xn, Yn)
+    assert i == 2
+
+    ref = protocol.run_protocol(list(Xs) + [Xn], list(Ys) + [Yn],
+                                anchor=setup.anchor, **kw)
+    _assert_setups_match(setup, ref, tol)
+
+
+@pytest.mark.parametrize("backend,tol", BACKENDS)
+def test_repeated_onboarding_does_not_drift(backend, tol):
+    """user, user, silo, user onto the growing deployment — the final state
+    must still match ONE from-scratch solve (errors must not compound)."""
+    rng = np.random.default_rng(21)
+    m = 5
+    Xs, Ys = _mkdata(rng, [2, 2], m)
+    kw = dict(m_tilde=3, anchor_r=90, seed=7, svd_backend=backend)
+    setup = protocol.run_protocol(Xs, Ys, onboard=True, **kw)
+    Xs2 = [list(r) for r in Xs]
+    Ys2 = [list(r) for r in Ys]
+
+    def new(n):
+        return rng.standard_normal((n, m)), rng.standard_normal((n, 1))
+
+    for tgt in (0, 1):
+        x, y = new(int(rng.integers(20, 35)))
+        setup.onboard_user(tgt, x, y)
+        Xs2[tgt].append(x)
+        Ys2[tgt].append(y)
+    silo = [new(int(rng.integers(20, 35))) for _ in range(2)]
+    setup.onboard_silo([x for x, _ in silo], [y for _, y in silo])
+    Xs2.append([x for x, _ in silo])
+    Ys2.append([y for _, y in silo])
+    x, y = new(28)
+    setup.onboard_user(2, x, y)                 # onto the onboarded silo
+    Xs2[2].append(x)
+    Ys2[2].append(y)
+
+    ref = protocol.run_protocol(Xs2, Ys2, anchor=setup.anchor, **kw)
+    _assert_setups_match(setup, ref, tol)
+
+
+def test_onboard_requires_state():
+    rng = np.random.default_rng(0)
+    Xs, Ys = _mkdata(rng, [2], 5)
+    setup = protocol.run_protocol(Xs, Ys, m_tilde=3, anchor_r=60, seed=0)
+    with pytest.raises(RuntimeError, match="onboard=True"):
+        setup.onboard_user(0, Xs[0][0], Ys[0][0])
+
+
+def test_onboarded_comm_cost_is_one_round_trip():
+    """The newcomer uploads its anchor image once and (conceptually)
+    downloads the model once — exactly the paper's 2-communication claim;
+    incumbents must not re-communicate."""
+    rng = np.random.default_rng(4)
+    Xs, Ys = _mkdata(rng, [2, 2], 5)
+    setup = protocol.run_protocol(Xs, Ys, m_tilde=3, anchor_r=60, seed=0,
+                                  onboard=True)
+    n_events = len(setup.comm.events)
+    setup.onboard_user(0, rng.standard_normal((25, 5)),
+                       rng.standard_normal((25, 1)))
+    new_events = setup.comm.events[n_events:]
+    uploads = [e for e in new_events if e.src.startswith("user")]
+    # exactly one user-originated upload: the newcomer's intermediates —
+    # incumbents communicate nothing (their f_j never re-fits)
+    assert len(uploads) == 1
+    assert uploads[0].src == "user(0,2)"

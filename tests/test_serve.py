@@ -99,6 +99,31 @@ def test_live_output_invariant_to_admission(tiny_params):
     assert outs[0] == ref
 
 
+def test_status_reports_partial_service(tiny_params):
+    """max_steps cuts serving short: the result must say WHICH requests
+    finished. Before ServeResult.status, a half-decoded request and a
+    finished one were indistinguishable in the returned mapping."""
+    server = BatchedServer(TINY, tiny_params, slots=1, cache_len=32)
+    reqs = [Request(rid=0, prompt=np.array([1, 2]), max_new=3),
+            Request(rid=1, prompt=np.array([3, 4]), max_new=30),
+            Request(rid=2, prompt=np.array([5, 6]), max_new=3)]
+    # slots=1 serves FIFO: rid 0 finishes, rid 1 is cut mid-decode at
+    # max_steps, rid 2 never reaches the slot
+    outs = server.serve(reqs, max_steps=6)
+    assert outs.status[0] == "done" and len(outs[0]) == 3
+    assert outs.status[1] == "truncated" and 0 < len(outs[1]) < 30
+    assert outs.status[2] == "pending" and outs[2] == []
+
+
+def test_status_all_done_when_drained(tiny_params):
+    server = BatchedServer(TINY, tiny_params, slots=2, cache_len=32)
+    reqs = [Request(rid=i, prompt=np.array([i + 1]), max_new=3)
+            for i in range(4)]
+    outs = server.serve(reqs)
+    assert all(s == "done" for s in outs.status.values())
+    assert sorted(outs.status) == [0, 1, 2, 3]
+
+
 def test_temperature_sampling_reproducible(tiny_params):
     """temperature>0 sampling keys on (rid, tokens emitted) — the same
     request produces the same stream whether it runs alone in 1 slot or
